@@ -1,0 +1,33 @@
+"""Fig 3 analogue — training time growth with micro-batch count.
+
+The paper's slowdown comes from per-chunk sub-graph rebuilds; we report
+epoch time AND the isolated rebuild cost so the overhead source is explicit.
+"""
+
+from __future__ import annotations
+
+import types
+
+from benchmarks.common import emit
+from repro.core.microbatch import make_plan
+from repro.graphs import load_dataset
+from repro.launch.train import run_gnn
+
+
+def run(*, dataset="cora", epochs=30, max_chunks=4):
+    g = load_dataset(dataset)
+    rows = []
+    for chunks in range(1, max_chunks + 1):
+        plan = make_plan(g, chunks, strategy="sequential")
+        args = types.SimpleNamespace(
+            mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
+            stages=4, chunks=chunks, epochs=epochs, seed=0, log_every=0,
+        )
+        r = run_gnn(args)
+        emit(
+            f"fig3/{dataset}/chunks{chunks}",
+            r["avg_epoch_s"] * 1e6,
+            f"rebuild_s={plan.rebuild_seconds:.3f};edge_cut={plan.edge_cut:.3f}",
+        )
+        rows.append((chunks, r["avg_epoch_s"], plan.rebuild_seconds))
+    return rows

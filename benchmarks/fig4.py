@@ -1,0 +1,39 @@
+"""Fig 4 analogue — accuracy vs chunks: the paper's collapse + our fixes.
+
+sequential = paper-faithful (edges dropped at chunk boundaries);
+greedy     = structure-aware partitions (beyond-paper);
+halo       = exact k-hop ghost nodes (beyond-paper; should match full batch).
+"""
+
+from __future__ import annotations
+
+import types
+
+from benchmarks.common import emit
+from repro.launch.train import run_gnn
+
+
+def run(*, dataset="cora", epochs=60, strategies=("sequential", "greedy", "halo")):
+    rows = []
+    base = types.SimpleNamespace(
+        mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
+        stages=1, chunks=1, epochs=epochs, seed=0, log_every=0,
+    )
+    full = run_gnn(base)
+    emit(f"fig4/{dataset}/full_batch", full["avg_epoch_s"] * 1e6,
+         f"val_acc={full['val_acc']:.3f}")
+    rows.append(("full", 1, full["val_acc"]))
+    for strategy in strategies:
+        for chunks in (2, 4):
+            args = types.SimpleNamespace(
+                mode="gnn", dataset=dataset, backend="padded", strategy=strategy,
+                stages=4, chunks=chunks, epochs=epochs, seed=0, log_every=0,
+            )
+            r = run_gnn(args)
+            emit(
+                f"fig4/{dataset}/{strategy}_chunks{chunks}",
+                r["avg_epoch_s"] * 1e6,
+                f"val_acc={r['val_acc']:.3f};edge_cut={r['edge_cut']:.3f}",
+            )
+            rows.append((strategy, chunks, r["val_acc"]))
+    return rows

@@ -1,0 +1,55 @@
+"""Kernel microbenches: Pallas (interpret on CPU) vs jnp oracle per shape.
+
+On this container the numbers measure the *reference* math (interpret mode
+executes kernel bodies in Python/XLA); they validate plumbing and give the
+oracle's CPU cost. TPU wall-clock comes from deploying with interpret=False.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels.gat_edge.kernel import gat_aggregate_kernel
+from repro.kernels.gat_edge.ref import gat_aggregate_ref
+from repro.kernels.spmm.kernel import padded_spmm_kernel
+from repro.kernels.spmm.ref import padded_spmm_ref
+from repro.kernels.ssd.ops import ssd
+from repro.models.transformer.ssm import ssd_chunked
+
+
+def run():
+    k = jax.random.PRNGKey(0)
+    # GAT edge (cora-scale)
+    h_, n, d, f = 8, 2708, 14, 8
+    nbr_hw = jax.random.normal(k, (h_, n, d, f))
+    s_self = jax.random.normal(jax.random.fold_in(k, 1), (h_, n))
+    s_nbr = jax.random.normal(jax.random.fold_in(k, 2), (h_, n, d))
+    mask = jnp.ones((n, d), bool)
+    t_ref = timed(jax.jit(gat_aggregate_ref), nbr_hw, s_self, s_nbr, mask)
+    t_ker = timed(lambda *a: gat_aggregate_kernel(*a), nbr_hw, s_self, s_nbr, mask)
+    emit("kernels/gat_edge/ref", t_ref, f"n={n};d={d};h={h_}")
+    emit("kernels/gat_edge/pallas_interpret", t_ker, "same shape")
+
+    # SpMM (pubmed-scale features)
+    n2, d2, f2 = 8192, 16, 64
+    hw = jax.random.normal(k, (n2, f2))
+    nbr = jax.random.randint(jax.random.fold_in(k, 3), (n2, d2), 0, n2)
+    norm = jax.random.uniform(jax.random.fold_in(k, 4), (n2, d2))
+    t_ref = timed(jax.jit(padded_spmm_ref), hw, nbr, norm)
+    t_ker = timed(lambda *a: padded_spmm_kernel(*a), hw, nbr, norm)
+    emit("kernels/spmm/ref", t_ref, f"n={n2};d={d2};f={f2}")
+    emit("kernels/spmm/pallas_interpret", t_ker, "same shape")
+
+    # SSD (mamba2-130m-ish slice)
+    b, s, hh, p, nn = 1, 512, 8, 64, 64
+    x = jax.random.normal(k, (b, s, hh, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 5), (b, s, hh))) * 0.1
+    A = -jnp.exp(jnp.linspace(0.0, 2.0, hh))
+    B = jax.random.normal(jax.random.fold_in(k, 6), (b, s, nn)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(k, 7), (b, s, nn)) * 0.3
+    t_ref = timed(jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0]), x, dt, A, B, C)
+    t_ker = timed(lambda *a: ssd(*a, 128), x, dt, A, B, C)
+    emit("kernels/ssd/ref_chunked", t_ref, f"s={s};h={hh};p={p};n={nn}")
+    emit("kernels/ssd/pallas_interpret", t_ker, "same shape")

@@ -1,0 +1,29 @@
+"""§Roofline table — prints the per-(arch × shape) roofline terms recorded
+by the dry-run sweep (reports/dryrun/*.json)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(*, reports_dir: str = "reports/dryrun", mesh: str = "16x16"):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(reports_dir, f"*__{mesh}.json"))):
+        r = json.load(open(fn))
+        rf = r["roofline"]
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}",
+            rf["bound_s"] * 1e6,
+            f"dominant={rf['dominant']};compute_s={rf['compute_s']:.4f};"
+            f"memory_s={rf['memory_s']:.4f};collective_s={rf['collective_s']:.4f};"
+            f"useful={rf['useful_flops_ratio']:.3f};"
+            f"peak_gib={r['memory']['peak_estimate_gib']}",
+        )
+        rows.append(r)
+    if not rows:
+        emit("roofline/none", 0.0, f"no reports under {reports_dir} — run dryrun first")
+    return rows

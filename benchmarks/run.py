@@ -1,0 +1,59 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure + roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--dataset cora]
+
+``--fast`` trims epochs for CI-speed runs; the full-protocol numbers
+(300 epochs, pubmed) are produced with ``--full`` as in the paper.
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--full", action="store_true", help="paper protocol: 300 epochs + pubmed")
+    ap.add_argument("--dataset", default="cora")
+    ap.add_argument("--only", default=None, help="comma list: table1,table2,fig3,fig4,kernels,roofline")
+    args = ap.parse_args()
+
+    epochs = 300 if args.full else (15 if args.fast else 60)
+    dataset = "pubmed" if args.full else args.dataset
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    if want("table1"):
+        from benchmarks import table1
+
+        datasets = ("cora", "citeseer", "pubmed") if args.full else ("cora",)
+        table1.run(datasets=datasets, epochs=epochs)
+    if want("table2"):
+        from benchmarks import table2
+
+        table2.run(dataset=dataset, epochs=epochs)
+    if want("fig3"):
+        from benchmarks import fig3
+
+        fig3.run(dataset=dataset, epochs=max(epochs // 2, 10))
+    if want("fig4"):
+        from benchmarks import fig4
+
+        fig4.run(dataset=dataset, epochs=epochs)
+    if want("kernels"):
+        from benchmarks import kernels_bench
+
+        kernels_bench.run()
+    if want("roofline"):
+        from benchmarks import roofline_table
+
+        roofline_table.run()
+    sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Table 2 analogue — pipeline configurations on one dataset.
+
+Paper rows: single CPU/GPU vs DGX+GPipe chunks 1–4 (epoch-1 time, epochs
+2–300 time, train loss/acc, val acc). Ours: single-device vs GPipe 4-stage
+with chunks 1–4 (sequential strategy, the faithful one).
+"""
+
+from __future__ import annotations
+
+import types
+
+from benchmarks.common import emit
+from repro.launch.train import run_gnn
+
+
+def _args(**kw):
+    base = dict(mode="gnn", dataset="cora", backend="padded", strategy="sequential",
+                stages=1, chunks=1, epochs=60, seed=0, log_every=0)
+    base.update(kw)
+    return types.SimpleNamespace(**base)
+
+
+def run(*, dataset="cora", epochs=60):
+    rows = []
+    single = run_gnn(_args(dataset=dataset, epochs=epochs))
+    emit(f"table2/{dataset}/single", single["avg_epoch_s"] * 1e6,
+         f"val_acc={single['val_acc']:.3f};first_epoch_s={single['first_epoch_s']:.2f}")
+    rows.append(("single", single))
+    for chunks in (1, 2, 3, 4):
+        r = run_gnn(_args(dataset=dataset, stages=4, chunks=chunks, epochs=epochs))
+        emit(
+            f"table2/{dataset}/gpipe_chunks{chunks}",
+            r["avg_epoch_s"] * 1e6,
+            f"val_acc={r['val_acc']:.3f};train_acc={r['train_acc']:.3f};"
+            f"edge_cut={r['edge_cut']:.3f};first_epoch_s={r['first_epoch_s']:.2f}",
+        )
+        rows.append((f"chunks{chunks}", r))
+    return rows

@@ -1,0 +1,41 @@
+"""The paper's experiment in miniature: GPipe the GAT across 4 stages and
+compare micro-batching strategies — the faithful lossy ``sequential`` split
+(accuracy collapses, Fig 4) vs the beyond-paper ``halo`` batching (exact).
+
+    PYTHONPATH=src python examples/pipeline_parallel_gnn.py [--dataset cora]
+"""
+
+import argparse
+import types
+
+from repro.launch.train import run_gnn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="cora")
+    ap.add_argument("--epochs", type=int, default=60)
+    args = ap.parse_args()
+
+    def cfg(**kw):
+        base = dict(mode="gnn", dataset=args.dataset, backend="padded",
+                    strategy="sequential", stages=1, chunks=1,
+                    epochs=args.epochs, seed=0, log_every=0)
+        base.update(kw)
+        return types.SimpleNamespace(**base)
+
+    print("== full batch (single device) ==")
+    full = run_gnn(cfg())
+    print("== GPipe 4 stages, 4 chunks, SEQUENTIAL split (paper-faithful) ==")
+    seq = run_gnn(cfg(stages=4, chunks=4, strategy="sequential"))
+    print("== GPipe 4 stages, 4 chunks, HALO batching (beyond-paper fix) ==")
+    halo = run_gnn(cfg(stages=4, chunks=4, strategy="halo"))
+
+    print("\nsummary (val accuracy):")
+    print(f"  full batch        {full['val_acc']:.3f}")
+    print(f"  gpipe sequential  {seq['val_acc']:.3f}   edges lost: {seq['edge_cut']:.0%}")
+    print(f"  gpipe halo        {halo['val_acc']:.3f}   edges lost: 0%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Batched serving: prefill a prompt batch, decode greedily through the
+pipelined serve_step (KV/SSM caches, ring buffers, the lot).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch codeqwen1.5-7b
+"""
+
+import argparse
+import types
+
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="codeqwen1.5-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--decode-steps", type=int, default=12)
+    a = ap.parse_args()
+    run(types.SimpleNamespace(
+        arch=a.arch, full_arch=False, prompt_len=a.prompt_len,
+        decode_steps=a.decode_steps, batch=a.batch, stages=1, chunks=1, seed=0,
+    ))
+
+
+if __name__ == "__main__":
+    main()

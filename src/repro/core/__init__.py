@@ -1,0 +1,16 @@
+# The paper's primary contribution: GPipe-style pipeline parallelism for
+# GNNs (and, generalized, for the assigned transformer pool).
+from repro.core.microbatch import MicroBatch, MicroBatchPlan, make_plan, STRATEGIES
+from repro.core.pipeline import GPipe, GPipeConfig
+from repro.core.schedule import fill_drain_timeline, bubble_fraction
+
+__all__ = [
+    "MicroBatch",
+    "MicroBatchPlan",
+    "make_plan",
+    "STRATEGIES",
+    "GPipe",
+    "GPipeConfig",
+    "fill_drain_timeline",
+    "bubble_fraction",
+]

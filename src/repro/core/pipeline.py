@@ -1,0 +1,239 @@
+"""GPipe for GNNs — the paper's §6 implementation, JAX-native.
+
+Faithful semantics:
+
+  * the sequential model is partitioned into stages by a ``balance`` array
+    (same contract as ``torchgpipe.GPipe(model, balance, chunks)``);
+  * the input is micro-batched into ``chunks`` (strategy pluggable — the
+    paper's index-sequential split is the default and reproduces its
+    accuracy collapse);
+  * forward runs the synchronous fill-drain schedule; backward re-computes
+    each stage's internals from its saved input (GPipe's activation
+    re-materialization) and accumulates gradients across micro-batches;
+  * a single synchronous optimizer update closes the step, so the number of
+    chunks never changes the *intended* gradient — only lossy micro-batching
+    of the graph does (measured by ``plan.edge_cut``).
+
+The schedule is driven at Python level with per-stage jitted kernels (and
+optional per-stage device placement), mirroring torchgpipe's host-driven
+queues; the compiled SPMD pipeline for the production mesh lives in
+``repro.core.spmd_pipe``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.microbatch import MicroBatch, MicroBatchPlan
+from repro.core.schedule import bubble_fraction
+from repro.models.gnn.net import GNNModel
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class GPipeConfig:
+    balance: tuple[int, ...]  # layers per stage; sums to len(model.layers)
+    chunks: int
+    devices: tuple | None = None  # optional per-stage device placement
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.balance)
+
+
+class GPipe:
+    """Pipeline-parallel wrapper around a sequential ``GNNModel``."""
+
+    def __init__(self, model: GNNModel, config: GPipeConfig):
+        if sum(config.balance) != len(model.layers):
+            raise ValueError(
+                f"balance {config.balance} must sum to {len(model.layers)} layers"
+            )
+        self.model = model
+        self.config = config
+        self._bounds: list[tuple[int, int]] = []
+        lo = 0
+        for b in config.balance:
+            self._bounds.append((lo, lo + b))
+            lo += b
+
+        self._fwd_fns = [self._make_fwd(s) for s in range(config.num_stages)]
+        self._bwd_fns = [self._make_bwd(s) for s in range(config.num_stages)]
+        self._loss_grad = jax.jit(jax.value_and_grad(_chunk_loss_sum, argnums=0, has_aux=True))
+
+    # ------------------------------------------------------------ stages --
+
+    def stage_params(self, params: list, s: int) -> list:
+        lo, hi = self._bounds[s]
+        return params[lo:hi]
+
+    def _stage_apply(self, s: int, stage_params: list, mb_graph, h, rngs, train: bool):
+        lo, hi = self._bounds[s]
+        for i, layer in enumerate(self.model.layers[lo:hi]):
+            h = layer.apply(stage_params[i], mb_graph, h, rngs[i], train)
+        return h
+
+    def _make_fwd(self, s: int):
+        def fwd(stage_params, mb_graph, h, rngs):
+            return self._stage_apply(s, stage_params, mb_graph, h, rngs, True)
+
+        return jax.jit(fwd)
+
+    def _make_bwd(self, s: int):
+        """Recompute-backward: GPipe re-materializes the stage forward from
+        its saved input, then pulls the cotangent back."""
+
+        def bwd(stage_params, mb_graph, h_in, rngs, ct):
+            def f(p, h):
+                return self._stage_apply(s, p, mb_graph, h, rngs, True)
+
+            _, vjp = jax.vjp(f, stage_params, h_in)
+            d_params, d_h = vjp(ct)
+            return d_params, d_h
+
+        return jax.jit(bwd)
+
+    def _place(self, tree, s: int):
+        devs = self.config.devices
+        if not devs:
+            return tree
+        return jax.device_put(tree, devs[s % len(devs)])
+
+    # -------------------------------------------------------------- step --
+
+    def init_params(self, key: jax.Array) -> list:
+        params = self.model.init_params(key)
+        if self.config.devices:
+            params = [
+                self._place(p, self._stage_of_layer(i)) for i, p in enumerate(params)
+            ]
+        return params
+
+    def _stage_of_layer(self, layer_idx: int) -> int:
+        for s, (lo, hi) in enumerate(self._bounds):
+            if lo <= layer_idx < hi:
+                return s
+        raise IndexError(layer_idx)
+
+    def _layer_rngs(self, rng: jax.Array, chunk: int):
+        n_layers = len(self.model.layers)
+        chunk_key = jax.random.fold_in(rng, chunk)
+        return jax.random.split(chunk_key, n_layers)
+
+    def forward_plan(
+        self, params: list, plan: MicroBatchPlan, rng: jax.Array, *, record=None
+    ) -> tuple[list[jax.Array], list[list[jax.Array]]]:
+        """Fill-drain forward over all chunks. Returns (final activations per
+        chunk, saved stage inputs [stage][chunk] for recompute-backward)."""
+        S, C = self.config.num_stages, plan.chunks
+        saved: list[list[Any]] = [[None] * C for _ in range(S)]
+        outs: list[Any] = [None] * C
+        # tick loop is explicit so work executes in true fill-drain order
+        for t in range(C + S - 1):
+            for s in range(S - 1, -1, -1):
+                c = t - s
+                if not (0 <= c < C):
+                    continue
+                mb = plan.batches[c]
+                h = mb.graph.features if s == 0 else saved[s][c]
+                t0 = time.perf_counter()
+                rngs = self._layer_rngs(rng, c)
+                lo, _ = self._bounds[s]
+                h_out = self._fwd_fns[s](
+                    self.stage_params(params, s),
+                    mb.graph,
+                    self._place(h, s),
+                    rngs[lo : lo + self.config.balance[s]],
+                )
+                if record is not None:
+                    jax.block_until_ready(h_out)
+                    record.append(("fwd", t, s, c, time.perf_counter() - t0))
+                if s == 0:
+                    saved[0][c] = mb.graph.features
+                if s + 1 < S:
+                    saved[s + 1][c] = h_out
+                else:
+                    outs[c] = h_out
+        return outs, saved
+
+    def train_step(
+        self,
+        params: list,
+        opt_state,
+        plan: MicroBatchPlan,
+        rng: jax.Array,
+        optimizer: opt_lib.Optimizer,
+        *,
+        record: list | None = None,
+    ):
+        """One synchronous GPipe step: fill-drain fwd, recompute bwd with
+        gradient accumulation over chunks, one optimizer update."""
+        S, C = self.config.num_stages, plan.chunks
+        outs, saved = self.forward_plan(params, plan, rng, record=record)
+
+        grads = [jax.tree_util.tree_map(jnp.zeros_like, p) for p in params]
+        cts: list[Any] = [None] * C
+        total_loss = jnp.zeros((), jnp.float32)
+        total_count = jnp.zeros((), jnp.float32)
+        for c, mb in enumerate(plan.batches):
+            (loss_sum, count), d_h = self._loss_grad(
+                outs[c], mb.graph.labels, mb.graph.train_mask & mb.core_mask
+            )
+            cts[c] = d_h
+            total_loss = total_loss + loss_sum
+            total_count = total_count + count
+
+        # drain backward in reverse fill-drain order
+        for t in range(C + S - 1):
+            for s in range(S):
+                c = (C - 1) - (t - (S - 1 - s))
+                if not (0 <= c < C):
+                    continue
+                mb = plan.batches[c]
+                rngs = self._layer_rngs(rng, c)
+                lo, hi = self._bounds[s]
+                t0 = time.perf_counter()
+                d_params, d_h = self._bwd_fns[s](
+                    self.stage_params(params, s),
+                    mb.graph,
+                    saved[s][c],
+                    rngs[lo:hi],
+                    cts[c],
+                )
+                if record is not None:
+                    jax.block_until_ready(d_h)
+                    record.append(("bwd", t, s, c, time.perf_counter() - t0))
+                cts[c] = d_h
+                for i, g in enumerate(d_params):
+                    grads[lo + i] = jax.tree_util.tree_map(jnp.add, grads[lo + i], g)
+
+        scale = 1.0 / jnp.maximum(total_count, 1.0)
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        loss = total_loss / jnp.maximum(total_count, 1.0)
+        return params, opt_state, loss
+
+    # ------------------------------------------------------------ report --
+
+    def describe(self) -> dict:
+        return {
+            "num_stages": self.config.num_stages,
+            "balance": list(self.config.balance),
+            "chunks": self.config.chunks,
+            "bubble_fraction": bubble_fraction(self.config.num_stages, self.config.chunks),
+            "layers": [l.name for l in self.model.layers],
+        }
+
+
+def _chunk_loss_sum(log_probs, labels, mask):
+    """(Σ nll·mask, Σ mask) — summed form so cross-chunk accumulation equals
+    the full-batch masked mean exactly."""
+    nll = -jnp.take_along_axis(log_probs, labels[:, None], axis=-1)[:, 0]
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m), jnp.sum(m)

@@ -1,0 +1,199 @@
+"""Compiled SPMD pipeline parallelism (GPipe fill-drain) via shard_map.
+
+This is the production-mesh generalization of the paper's technique: the
+host-driven torchgpipe queue schedule becomes a single compiled program —
+one `lax.scan` tick per pipeline slot, `lax.ppermute` moving activations
+stage→stage over the mesh's ``stage_axis``.
+
+Contract (everything below happens *inside* shard_map):
+
+  * ``stage_fn(my_in, state_mb) -> (y, state_mb')`` — this device's whole
+    stage (its layers_per_stage layers). Parameters/extras are closed over;
+    build them with ``make_scanned_stage`` for the homogeneous case or
+    hand-roll for heterogeneous stages (e.g. zamba2's 5 mamba slots + 1
+    weight-shared attention slot).
+  * ``x``: (num_micro, micro_batch, ...) — this device's data shard, already
+    microbatched. Stage 0 consumes microbatch ``t`` at tick ``t``; the last
+    stage emits it at tick ``t + S - 1``.
+  * ``state``: optional per-microbatch persistent state (KV/SSM caches for
+    decode), leaves shaped (num_micro, ...); the pipeline slices microbatch
+    ``c`` in, writes the update back, and returns the final state.
+
+GPipe's activation re-materialization is the ``remat`` flag (jax.checkpoint
+around the per-tick stage body). Gradients flow through ``ppermute``/scan —
+the backward pipeline — and FSDP all-gathers inside ``stage_fn`` transpose
+into gradient reduce-scatters (ZeRO-3) automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def spmd_pipeline(
+    stage_fn: Callable[[Any, Any], tuple[Any, Any]],
+    x: jax.Array,
+    *,
+    stage_axis: str,
+    num_stages: int,
+    state: Any = None,
+    remat: bool = False,
+    scatter_dim: int | None = None,
+    vma_refs: tuple = (),
+):
+    """Fill-drain pipeline. Returns (outputs, final_state); ``outputs`` is
+    the last stage's per-microbatch output. With ``scatter_dim=None`` it is
+    psum-broadcast across the stage axis (shaped like ``x``); with
+    ``scatter_dim=d`` it is reduce-scattered along that output dim instead —
+    cheaper on the wire and it leaves downstream work (LM head, loss)
+    sharded over the stage axis instead of redundantly replicated."""
+    stage = lax.axis_index(stage_axis)
+    is_first = stage == 0
+    is_last = stage == num_stages - 1
+    num_micro = x.shape[0]
+
+    fn = stage_fn
+    if remat:
+        fn = jax.checkpoint(stage_fn)
+
+    def tick_body(body_carry, t):
+        prev_in, st = body_carry
+        c = t - stage  # microbatch this stage works on at tick t
+        mb_idx = jnp.clip(c, 0, num_micro - 1)
+        valid = (c >= 0) & (c < num_micro)
+
+        fresh = lax.dynamic_index_in_dim(x, jnp.clip(t, 0, num_micro - 1), 0, keepdims=False)
+        my_in = jnp.where(is_first, fresh, prev_in)
+
+        st_mb = jax.tree_util.tree_map(
+            lambda a: lax.dynamic_index_in_dim(a, mb_idx, 0, keepdims=False), st
+        )
+        y, st_mb_new = fn(my_in, st_mb)
+        # fill/drain ticks compute garbage; route their state writes to the
+        # sacrificial slot num_micro (slice-sized traffic per tick — a full
+        # per-tick jnp.where over the buffer would read+write the whole
+        # cache every tick).
+        w_idx = jnp.where(valid, mb_idx, num_micro)
+        st = jax.tree_util.tree_map(
+            lambda a, u: lax.dynamic_update_index_in_dim(a, u, w_idx, 0),
+            st,
+            st_mb_new,
+        )
+
+        nxt = lax.ppermute(
+            y, stage_axis, perm=[(i, (i + 1) % num_stages) for i in range(num_stages)]
+        )
+        # y is emitted as a scan output (ys), NOT carried in an accumulator:
+        # a carried buffer would be saved per tick as an AD residual
+        # (~ticks × buffer bytes); stacked ys cost one buffer total.
+        return (nxt, st), y
+
+    from repro.core.vma import match_vma
+
+    prev0 = match_vma(jnp.zeros_like(x[0]), x, vma_refs, extra=(stage_axis,))
+    if state is None:
+        state = ()
+    # append the sacrificial garbage-tick slot (stripped after the scan)
+    state = jax.tree_util.tree_map(
+        lambda a: jnp.concatenate([a, jnp.zeros_like(a[:1])], axis=0), state
+    )
+    state = match_vma(state, x, state, vma_refs, extra=(stage_axis,))
+    (_, state), ys = lax.scan(
+        tick_body,
+        (prev0, state),
+        jnp.arange(num_micro + num_stages - 1),
+    )
+    state = jax.tree_util.tree_map(lambda a: a[:num_micro], state)
+    # last stage emitted microbatch m at tick m + S - 1; drop the fill ticks
+    outputs = ys[num_stages - 1 :]
+    outputs = jnp.where(is_last, outputs, jnp.zeros_like(outputs))
+    if scatter_dim is None:
+        outputs = lax.psum(outputs, stage_axis)
+    else:
+        outputs = lax.psum_scatter(
+            outputs, stage_axis, scatter_dimension=scatter_dim, tiled=True
+        )
+    return outputs, state
+
+
+# --------------------------------------------------- homogeneous helpers --
+
+
+def make_gather_fn(gather_mask: Any, axis_name: str) -> Callable[[Any], Any]:
+    """ZeRO-3 gather: all-gather each leaf whose (static, same-structure)
+    ``gather_mask`` entry is True along its first dim. AD transposes the
+    gather into a gradient reduce-scatter."""
+    flat_mask = jax.tree_util.tree_leaves(
+        gather_mask, is_leaf=lambda x: isinstance(x, bool)
+    )
+
+    def gather(params: Any) -> Any:
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        assert len(flat) == len(flat_mask), (len(flat), len(flat_mask))
+        out = [
+            lax.all_gather(leaf, axis_name, axis=0, tiled=True) if m else leaf
+            for leaf, m in zip(flat, flat_mask)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return gather
+
+
+def make_scanned_stage(
+    block_fn: Callable[[Any, Any, Any], Any],
+    params_local: Any,  # leaves (layers_per_stage, ...)
+    extras_local: Any,
+    *,
+    gather_fn: Callable[[Any], Any] | None = None,
+) -> Callable:
+    """Homogeneous stateless stage: scan ``block_fn`` over this stage's
+    layers. ``block_fn(layer_params, layer_extras, h) -> h``."""
+
+    def stage_fn(h, state_mb):
+        from repro.core.vma import match_vma
+
+        def one_layer(c, xs):
+            lp, ex = xs
+            if gather_fn is not None:
+                lp = gather_fn(lp)
+            return block_fn(lp, ex, c), None
+
+        # params may vary over more mesh axes than h (e.g. fsdp gathers);
+        # the layer-scan carry must match the body output's vma
+        h = match_vma(h, params_local, extras_local, h)
+        h, _ = lax.scan(one_layer, h, (params_local, extras_local))
+        return h, state_mb
+
+    return stage_fn
+
+
+def make_scanned_stage_stateful(
+    block_fn: Callable[[Any, Any, Any, Any], tuple[Any, Any]],
+    params_local: Any,
+    extras_local: Any,
+    *,
+    gather_fn: Callable[[Any], Any] | None = None,
+) -> Callable:
+    """Homogeneous stateful stage (decode/prefill-cache): state_mb leaves are
+    (layers_per_stage, ...) and ride the layer scan as xs/ys.
+    ``block_fn(layer_params, layer_extras, h, cache_i) -> (h, cache_i')``."""
+
+    def stage_fn(h, state_mb):
+        from repro.core.vma import match_vma
+
+        def one_layer(c, xs):
+            lp, ex, cache_i = xs
+            if gather_fn is not None:
+                lp = gather_fn(lp)
+            c, cache_out = block_fn(lp, ex, c, cache_i)
+            return c, cache_out
+
+        h = match_vma(h, params_local, extras_local, state_mb, h)
+        h, new_cache = lax.scan(one_layer, h, (params_local, extras_local, state_mb))
+        return h, new_cache
+
+    return stage_fn

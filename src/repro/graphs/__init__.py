@@ -1,0 +1,11 @@
+from repro.graphs.data import GraphBatch, build_graph_batch, subgraph, validate_graph
+from repro.graphs.datasets import load_dataset, DATASETS
+
+__all__ = [
+    "GraphBatch",
+    "build_graph_batch",
+    "subgraph",
+    "validate_graph",
+    "load_dataset",
+    "DATASETS",
+]

@@ -1,0 +1,200 @@
+"""Graph containers in a TPU-native *padded-neighbor* layout.
+
+The paper's DGL/PyG backends aggregate with CUDA scatter/gather kernels.
+TPUs have no fast random scatter, so the framework stores every node's
+neighborhood padded to a fixed width ``max_deg``:
+
+    neighbors : (n, max_deg) int32   — column j is the j-th neighbor of node i
+    mask      : (n, max_deg) bool    — False on padding slots
+    norm      : (n, max_deg) float32 — GCN symmetric-normalization 1/sqrt(d_i d_j)
+
+Gathers over this layout are contiguous VMEM tiles and the weighted sums hit
+the VPU/MXU — this is the hardware adaptation recorded in DESIGN.md §3.
+
+Self-loops are stored explicitly in slot 0 (both GCN and GAT attend to the
+node itself).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "features",
+        "neighbors",
+        "mask",
+        "norm",
+        "labels",
+        "train_mask",
+        "val_mask",
+        "test_mask",
+        "node_ids",
+    ],
+    meta_fields=["num_classes"],
+)
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """A (sub)graph in padded-neighbor layout. A pytree — jit/shard friendly."""
+
+    features: jax.Array  # (n, d) float
+    neighbors: jax.Array  # (n, max_deg) int32, local indices; 0 on padding
+    mask: jax.Array  # (n, max_deg) bool
+    norm: jax.Array  # (n, max_deg) float32 GCN coefficients
+    labels: jax.Array  # (n,) int32
+    train_mask: jax.Array  # (n,) bool
+    val_mask: jax.Array  # (n,) bool
+    test_mask: jax.Array  # (n,) bool
+    node_ids: jax.Array  # (n,) int32 global ids (for sub-graph bookkeeping)
+    num_classes: int = 2
+
+    @property
+    def num_nodes(self) -> int:
+        return self.features.shape[0]
+
+    @property
+    def max_degree(self) -> int:
+        return self.neighbors.shape[1]
+
+    @property
+    def num_features(self) -> int:
+        return self.features.shape[1]
+
+    @property
+    def num_edges(self) -> jax.Array:
+        """Directed edge slots in use, excluding self-loops."""
+        return jnp.sum(self.mask) - self.num_nodes
+
+
+def _edges_to_adj_lists(num_nodes: int, edges: np.ndarray) -> list[list[int]]:
+    """Undirected edge list (m, 2) -> per-node sorted neighbor lists."""
+    adj: list[set[int]] = [set() for _ in range(num_nodes)]
+    for a, b in edges:
+        a, b = int(a), int(b)
+        if a == b:
+            continue
+        adj[a].add(b)
+        adj[b].add(a)
+    return [sorted(s) for s in adj]
+
+
+def build_graph_batch(
+    features: np.ndarray,
+    edges: np.ndarray,
+    labels: np.ndarray,
+    num_classes: int,
+    *,
+    train_mask: np.ndarray | None = None,
+    val_mask: np.ndarray | None = None,
+    test_mask: np.ndarray | None = None,
+    max_degree: int | None = None,
+    dtype=jnp.float32,
+) -> GraphBatch:
+    """Build a GraphBatch from a numpy undirected edge list.
+
+    ``max_degree`` caps the padded width (excess neighbors dropped
+    deterministically, highest-index first); default is the true max degree.
+    Slot 0 always holds the self-loop.
+    """
+    n = features.shape[0]
+    adj = _edges_to_adj_lists(n, edges)
+    true_max = max((len(a) for a in adj), default=0)
+    width = 1 + (true_max if max_degree is None else min(max_degree, true_max))
+
+    neighbors = np.zeros((n, width), dtype=np.int32)
+    mask = np.zeros((n, width), dtype=bool)
+    deg = np.array([len(a) for a in adj], dtype=np.float64) + 1.0  # self-loop
+
+    for i, nbrs in enumerate(adj):
+        nbrs = nbrs[: width - 1]
+        neighbors[i, 0] = i  # self-loop
+        mask[i, 0] = True
+        neighbors[i, 1 : 1 + len(nbrs)] = nbrs
+        mask[i, 1 : 1 + len(nbrs)] = True
+
+    # GCN symmetric normalization over the self-looped graph.
+    inv_sqrt = 1.0 / np.sqrt(deg)
+    norm = inv_sqrt[:, None] * inv_sqrt[neighbors] * mask
+
+    def _m(m):
+        return np.ones(n, dtype=bool) if m is None else np.asarray(m, dtype=bool)
+
+    return GraphBatch(
+        features=jnp.asarray(features, dtype=dtype),
+        neighbors=jnp.asarray(neighbors),
+        mask=jnp.asarray(mask),
+        norm=jnp.asarray(norm, dtype=dtype),
+        labels=jnp.asarray(labels, dtype=jnp.int32),
+        train_mask=jnp.asarray(_m(train_mask)),
+        val_mask=jnp.asarray(_m(val_mask)),
+        test_mask=jnp.asarray(_m(test_mask)),
+        node_ids=jnp.arange(n, dtype=jnp.int32),
+        num_classes=int(num_classes),
+    )
+
+
+def subgraph(g: GraphBatch, node_idx: np.ndarray, *, keep_halo_edges: bool = False) -> GraphBatch:
+    """Re-build the sub-graph induced by ``node_idx`` — the paper's §6 step.
+
+    Exactly reproduces the paper's lossy behaviour: every edge with an
+    endpoint outside ``node_idx`` is dropped (unless the halo machinery in
+    graphs/partition.py has already extended ``node_idx``).
+
+    Host-side (numpy) by design: the paper performs this on CPU per
+    micro-batch, and our Fig-3 analogue charges this exact cost.
+    """
+    node_idx = np.asarray(node_idx)
+    n_sub = node_idx.shape[0]
+    old_neighbors = np.asarray(g.neighbors)[node_idx]
+    old_mask = np.asarray(g.mask)[node_idx]
+
+    # global -> local remap; -1 marks "outside the chunk"
+    remap = -np.ones(g.num_nodes, dtype=np.int64)
+    remap[node_idx] = np.arange(n_sub)
+
+    local = remap[old_neighbors]
+    keep = old_mask & (local >= 0)
+    local = np.where(keep, local, 0)
+
+    deg = keep.sum(axis=1).astype(np.float64)  # includes self-loop
+    inv_sqrt = np.zeros_like(deg)
+    nz = deg > 0
+    inv_sqrt[nz] = 1.0 / np.sqrt(deg[nz])
+    norm = inv_sqrt[:, None] * inv_sqrt[np.where(keep, local, 0)] * keep
+    del keep_halo_edges  # halo logic lives in graphs/partition.py
+
+    return GraphBatch(
+        features=g.features[node_idx],
+        neighbors=jnp.asarray(local.astype(np.int32)),
+        mask=jnp.asarray(keep),
+        norm=jnp.asarray(norm, dtype=g.norm.dtype),
+        labels=g.labels[node_idx],
+        train_mask=g.train_mask[node_idx],
+        val_mask=g.val_mask[node_idx],
+        test_mask=g.test_mask[node_idx],
+        node_ids=g.node_ids[node_idx],
+        num_classes=g.num_classes,
+    )
+
+
+def validate_graph(g: GraphBatch) -> None:
+    """Structural invariants (used by tests and the data pipeline)."""
+    n, w = g.neighbors.shape
+    assert g.mask.shape == (n, w)
+    assert g.norm.shape == (n, w)
+    assert g.features.shape[0] == n
+    assert g.labels.shape == (n,)
+    nbr = np.asarray(g.neighbors)
+    msk = np.asarray(g.mask)
+    assert nbr.min() >= 0 and nbr.max() < max(n, 1), "neighbor index out of range"
+    assert np.all(np.asarray(g.norm)[~msk] == 0), "norm must be 0 on padding"
+    # self-loop in slot 0 wherever the node has any edge slot at all
+    has_any = msk.any(axis=1)
+    assert np.all(nbr[has_any, 0] == np.arange(n)[has_any]), "slot 0 must be the self-loop"

@@ -1,0 +1,48 @@
+"""Public flash-attention op, model layout in/out (+ custom VJP)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash.kernel import flash_attention_kernel
+from repro.models.transformer.attention import blocked_attention
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, window=0, softcap=0.0, block_q=128, block_kv=128):
+    """Causal flash attention. q: (B,S,H,hd); k/v: (B,S,KV,hd[_v]).
+    Pallas forward, oracle-derived backward."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, s, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * kv, s, -1)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * kv, s, -1)
+    out = flash_attention_kernel(
+        qf, kf, vf, num_q_heads=h, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv,
+    )
+    return jnp.moveaxis(out.reshape(b, h, s, -1), 1, 2)
+
+
+def _ref(q, k, v, window, softcap):
+    s = q.shape[1]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    return blocked_attention(
+        q, k, v, q_pos=pos, kv_pos=pos, window=window, attn_softcap=softcap,
+    )
+
+
+def _fwd(q, k, v, window, softcap, block_q, block_kv):
+    return flash_attention(q, k, v, window, softcap, block_q, block_kv), (q, k, v)
+
+
+def _bwd(window, softcap, block_q, block_kv, res, ct):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b, c: _ref(a, b, c, window, softcap), q, k, v)
+    return vjp(ct)
+
+
+flash_attention.defvjp(_fwd, _bwd)

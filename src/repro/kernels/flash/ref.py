@@ -1,0 +1,27 @@
+"""Oracle for the flash-attention kernel: the pure-jnp online-softmax
+implementation already used by the models (plus a naive quadratic check)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.attention import blocked_attention  # noqa: F401
+
+
+def naive_attention(q, k, v, *, q_pos, kv_pos, window=0, attn_softcap=0.0):
+    """O(S²)-memory reference. Shapes as blocked_attention."""
+    b, sq, h, hd = q.shape
+    kv_heads = k.shape[2]
+    g = h // kv_heads
+    qg = q.reshape(b, sq, kv_heads, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bikgd,bjkd->bkgij", qg, k.astype(jnp.float32)) / jnp.sqrt(hd)
+    if attn_softcap > 0:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    ok = kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok = ok & ((q_pos[:, None] - kv_pos[None, :]) < window)
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgij,bjkd->bikgd", a, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)

@@ -1,0 +1,63 @@
+"""Public op for the fused GAT attention kernel (+ custom VJP).
+
+``gat_aggregate`` takes the UNgathered layer tensors (matching the layer
+call-site in ``repro.models.gnn.layers``), performs the neighbor gather in
+XLA, and runs the fused Pallas kernel forward. Backward re-derives the vjp
+from the jnp oracle (kernel-forward / oracle-backward is the standard
+recompute pairing; the two agree to float tolerance by the kernel tests).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gat_edge.kernel import gat_aggregate_kernel
+from repro.kernels.gat_edge.ref import gat_aggregate_ref
+
+
+def _prepare(hw, s_src, s_dst, neighbors):
+    # hw: (N, H, F) -> head-major gathered (H, N, D, F)
+    nbr_hw = jnp.moveaxis(hw[neighbors], 2, 0)  # (H, N, D, F)
+    s_self = s_src.T  # (H, N)
+    s_nbr = jnp.moveaxis(s_dst[neighbors], 2, 0)  # (H, N, D)
+    return nbr_hw, s_self, s_nbr
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5,))
+def gat_aggregate(hw, s_src, s_dst, neighbors, mask, negative_slope=0.2):
+    """(N, H, F) aggregated outputs; forward = Pallas kernel."""
+    nbr_hw, s_self, s_nbr = _prepare(hw, s_src, s_dst, neighbors)
+    out = gat_aggregate_kernel(
+        nbr_hw, s_self, s_nbr, mask, negative_slope=negative_slope
+    )
+    return jnp.moveaxis(out, 0, 1)  # (N, H, F)
+
+
+def _ref_call(hw, s_src, s_dst, neighbors, mask, negative_slope):
+    nbr_hw, s_self, s_nbr = _prepare(hw, s_src, s_dst, neighbors)
+    return jnp.moveaxis(
+        gat_aggregate_ref(nbr_hw, s_self, s_nbr, mask, negative_slope=negative_slope),
+        0,
+        1,
+    )
+
+
+def _fwd(hw, s_src, s_dst, neighbors, mask, negative_slope):
+    out = gat_aggregate(hw, s_src, s_dst, neighbors, mask, negative_slope)
+    return out, (hw, s_src, s_dst, neighbors, mask)
+
+
+def _bwd(negative_slope, res, ct):
+    hw, s_src, s_dst, neighbors, mask = res
+    _, vjp = jax.vjp(
+        lambda a, b, c: _ref_call(a, b, c, neighbors, mask, negative_slope),
+        hw, s_src, s_dst,
+    )
+    d_hw, d_src, d_dst = vjp(ct)
+    return d_hw, d_src, d_dst, None, None
+
+
+gat_aggregate.defvjp(_fwd, _bwd)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused GAT neighbor-attention kernel.
+
+Math (paper eq. 3–4, per head, over the padded-neighbor layout):
+
+    e[i,j]     = LeakyReLU(s_self[i] + s_nbr[i,j])
+    alpha[i,:] = masked softmax_j(e[i,:])
+    out[i]     = Σ_j alpha[i,j] · nbr_hw[i,j,:]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e9
+
+
+def gat_aggregate_ref(
+    nbr_hw: jax.Array,  # (H, N, D, F) gathered neighbor features
+    s_self: jax.Array,  # (H, N)
+    s_nbr: jax.Array,  # (H, N, D)
+    mask: jax.Array,  # (N, D) bool
+    *,
+    negative_slope: float = 0.2,
+) -> jax.Array:  # (H, N, F)
+    scores = jax.nn.leaky_relu(s_self[..., None] + s_nbr, negative_slope)
+    scores = jnp.where(mask[None], scores.astype(jnp.float32), _NEG)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m) * mask[None]
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    alpha = (p / l).astype(nbr_hw.dtype)
+    return jnp.einsum("hnd,hndf->hnf", alpha, nbr_hw)

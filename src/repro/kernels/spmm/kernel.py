@@ -1,0 +1,72 @@
+"""Padded-neighbor SpMM — Pallas TPU kernel with scalar-prefetched gather.
+
+The TPU adaptation of the paper's DGL/PyG CSR SpMM (DESIGN.md §3): the
+feature matrix stays resident in VMEM (citation-scale graphs: ≤ ~20k × 64
+floats ≈ 5 MB, well under the ~128 MB v5e VMEM), the padded neighbor-index
+matrix rides in scalar-prefetch (SMEM) so row indices can drive dynamic VMEM
+row loads — the Pallas TPU idiom for data-dependent access. Grid over node
+tiles; each tile accumulates its D weighted neighbor rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(nbr_ref, norm_ref, hw_ref, out_ref, *, block_n: int, max_deg: int):
+    i = pl.program_id(0)
+
+    def row_body(t, _):
+        gi = i * block_n + t  # global node id (rows padded to grid)
+        acc = jnp.zeros((hw_ref.shape[1],), jnp.float32)
+
+        def nbr_body(j, acc):
+            idx = nbr_ref[gi, j]  # scalar from SMEM prefetch
+            row = pl.load(hw_ref, (pl.dslice(idx, 1), slice(None)))[0]
+            w = norm_ref[t, j]
+            return acc + w.astype(jnp.float32) * row.astype(jnp.float32)
+
+        acc = jax.lax.fori_loop(0, max_deg, nbr_body, acc)
+        out_ref[t, :] = acc.astype(out_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, block_n, row_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def padded_spmm_kernel(
+    hw: jax.Array,  # (N, F)
+    neighbors: jax.Array,  # (N, D) int32
+    norm: jax.Array,  # (N, D)
+    *,
+    block_n: int = 256,
+    interpret: bool = True,  # CPU container: interpret; TPU target: False
+) -> jax.Array:
+    n, f = hw.shape
+    d = neighbors.shape[1]
+    pad = (-n) % block_n
+    nbr_p = jnp.pad(neighbors, ((0, pad), (0, 0)))
+    norm_p = jnp.pad(norm, ((0, pad), (0, 0)))
+    n_pad = n + pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, nbr: (i, 0)),
+            pl.BlockSpec((n, f), lambda i, nbr: (0, 0)),  # resident
+        ],
+        out_specs=pl.BlockSpec((block_n, f), lambda i, nbr: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_n=block_n, max_deg=d),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad, f), hw.dtype),
+        interpret=interpret,
+    )(nbr_p, norm_p, hw)
+    return out[:n]

@@ -1,0 +1,30 @@
+"""Public op for the padded SpMM kernel (+ custom VJP via the oracle)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.spmm.kernel import padded_spmm_kernel
+from repro.kernels.spmm.ref import padded_spmm_ref
+
+
+@jax.custom_vjp
+def padded_spmm(hw, neighbors, norm):
+    """out[i] = Σ_j norm[i,j] · hw[neighbors[i,j]] — Pallas forward."""
+    return padded_spmm_kernel(hw, neighbors, norm)
+
+
+def _fwd(hw, neighbors, norm):
+    return padded_spmm(hw, neighbors, norm), (hw, neighbors, norm)
+
+
+def _bwd(res, ct):
+    hw, neighbors, norm = res
+    _, vjp = jax.vjp(lambda a, w: padded_spmm_ref(a, neighbors, w), hw, norm)
+    d_hw, d_norm = vjp(ct)
+    return d_hw, None, d_norm
+
+
+padded_spmm.defvjp(_fwd, _bwd)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for padded-neighbor SpMM (GCN aggregation):
+
+    out[i] = Σ_j norm[i, j] · hw[neighbors[i, j]]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def padded_spmm_ref(hw: jax.Array, neighbors: jax.Array, norm: jax.Array) -> jax.Array:
+    """hw: (N, F); neighbors: (N, D) int32; norm: (N, D) (0 on padding)."""
+    return jnp.einsum("nd,ndf->nf", norm, hw[neighbors])

@@ -1,0 +1,93 @@
+"""Mamba2 SSD chunk scan — Pallas TPU kernel.
+
+The state-space-duality formulation maps exactly onto the MXU (DESIGN.md §7):
+per chunk of Q tokens, three dense matmuls —
+
+    CB      = C · Bᵀ                       (Q×N)·(N×Q)
+    Y_intra = (CB ∘ causal-decay) · (x·dt) (Q×Q)·(Q×P)
+    Y_inter = C · Hᵀ · diag(exp cums)      (Q×N)·(N×P)
+    H'      = exp(la_Q)·H + (x·dt)ᵀ·(B ∘ decay)   (P×Q)·(Q×N)
+
+— plus an O(1) inter-chunk recurrence carried in a VMEM scratch across grid
+steps (the TPU grid is sequential, minor-most fastest, so the chunk axis is
+the inner grid dim and the (P, N) state lives on-chip for a whole (batch,
+head) row).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, loga_ref, b_ref, c_ref, y_ref, h_scratch, *, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[0].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (Q,)
+    la = loga_ref[0].astype(jnp.float32)  # (Q,)
+    bb = b_ref[0].astype(jnp.float32)  # (Q, N)
+    cc = c_ref[0].astype(jnp.float32)  # (Q, N)
+    h = h_scratch[...]  # (P, N) f32
+
+    q = x.shape[0]
+    cums = jnp.cumsum(la)  # (Q,)
+    xd = x * dt[:, None]
+
+    cb = jnp.dot(cc, bb.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    decay = jnp.exp(cums[:, None] - cums[None, :])
+    causal = jnp.tril(jnp.ones((q, q), jnp.float32))
+    g = cb * decay * causal
+    y = jnp.dot(g, xd, preferred_element_type=jnp.float32)  # intra
+
+    y = y + jnp.dot(cc, h.T, preferred_element_type=jnp.float32) * jnp.exp(cums)[:, None]
+
+    dstate = jnp.exp(cums[-1] - cums)  # (Q,)
+    h_new = jnp.exp(cums[-1]) * h + jnp.dot(
+        xd.T, bb * dstate[:, None], preferred_element_type=jnp.float32
+    )
+    h_scratch[...] = h_new
+    y_ref[0] = y.astype(y_ref.dtype)
+    del nc
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_kernel(
+    x: jax.Array,  # (BH, S, P)  — batch×heads flattened
+    dt: jax.Array,  # (BH, S)
+    loga: jax.Array,  # (BH, S)   — A[h]·dt, precomputed
+    B: jax.Array,  # (BH, S, N)
+    C: jax.Array,  # (BH, S, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = True,  # CPU container: interpret; TPU target: False
+) -> jax.Array:
+    bh, s, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk), lambda i, c: (i, c)),
+            pl.BlockSpec((1, chunk), lambda i, c: (i, c)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, loga, B, C)
+    return out

@@ -1,0 +1,43 @@
+"""Public op for the SSD Pallas kernel, model-layout in/out (+ custom VJP)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_kernel
+from repro.models.transformer.ssm import ssd_chunked
+
+
+def _to_bh(x, dt, A, B, C):
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xf = jnp.moveaxis(x, 2, 1).reshape(b * h, s, p)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(b * h, s)
+    loga = jnp.moveaxis(dt * A[None, None, :], 2, 1).reshape(b * h, s)
+    Bf = jnp.repeat(B[:, None], h, axis=1).reshape(b * h, s, n)
+    Cf = jnp.repeat(C[:, None], h, axis=1).reshape(b * h, s, n)
+    return xf, dtf, loga, Bf, Cf
+
+
+@jax.custom_vjp
+def ssd(x, dt, A, B, C, chunk=128):
+    """Mamba2 SSD, model layout: x (b,s,h,p), dt (b,s,h), A (h,), B/C (b,s,n).
+    Returns y (b,s,h,p); Pallas forward, oracle-derived backward."""
+    b, s, h, p = x.shape
+    xf, dtf, loga, Bf, Cf = _to_bh(x, dt, A, B, C)
+    y = ssd_kernel(xf, dtf, loga, Bf, Cf, chunk=chunk)
+    return jnp.moveaxis(y.reshape(b, h, s, p), 1, 2)
+
+
+def _fwd(x, dt, A, B, C, chunk=128):
+    return ssd(x, dt, A, B, C, chunk), (x, dt, A, B, C, chunk)
+
+
+def _bwd(res, ct):
+    x, dt, A, B, C, chunk = res
+    _, vjp = jax.vjp(lambda *args: ssd_chunked(*args, chunk=chunk)[0], x, dt, A, B, C)
+    return (*vjp(ct), None)
+
+
+ssd.defvjp(_fwd, _bwd)

@@ -1,0 +1,4 @@
+"""Oracle for the SSD chunk kernel — re-exports the model's chunked SSD and
+the sequential recurrence (both in repro.models.transformer.ssm)."""
+
+from repro.models.transformer.ssm import ssd_chunked, ssd_reference  # noqa: F401

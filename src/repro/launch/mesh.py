@@ -1,0 +1,28 @@
+"""Production mesh builders (DESIGN.md §5).
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state; call it only after the XLA device count is configured
+(dryrun.py sets the 512-placeholder-device flag before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 (data, model). Two pods: 2×16×16 (pod, data, model).
+
+    ``model`` is the pipeline-stage axis, ``data`` is DP+ZeRO-3(+EP),
+    ``pod`` is cross-pod data parallelism — see DESIGN.md §5.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(*, data: int = 2, model: int = 4, pod: int | None = None):
+    """Reduced mesh for CPU smoke tests (requires host-device override)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

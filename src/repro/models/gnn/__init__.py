@@ -1,0 +1,25 @@
+from repro.models.gnn.layers import (
+    gat_layer,
+    gcn_layer,
+    graph_conv_layer,
+    gated_graph_conv_layer,
+    init_gat,
+    init_gcn,
+    init_graph_conv,
+    init_gated_graph_conv,
+)
+from repro.models.gnn.net import build_paper_gat, build_gnn, GNNModel
+
+__all__ = [
+    "gat_layer",
+    "gcn_layer",
+    "graph_conv_layer",
+    "gated_graph_conv_layer",
+    "init_gat",
+    "init_gcn",
+    "init_graph_conv",
+    "init_gated_graph_conv",
+    "build_paper_gat",
+    "build_gnn",
+    "GNNModel",
+]

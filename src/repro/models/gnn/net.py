@@ -1,0 +1,204 @@
+"""The paper's sequential GAT network (§6), as a stage-able layer sequence.
+
+The model is expressed as an explicit ``list[SeqLayer]`` — the same shape as
+the paper's ``nn.Sequential`` — so the GPipe engine in ``repro.core`` can
+partition it with a ``balance`` array exactly like torchgpipe does.
+
+Forward structure (paper §6, fixed across all experiments):
+
+    dropout(0.6) -> GAT(8 heads, concat, attn-dropout 0.6) -> ELU
+    -> dropout(0.6) -> GAT(8 heads, average, attn-dropout 0.6) -> log_softmax
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.data import GraphBatch
+from repro.models.gnn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqLayer:
+    """One element of a sequential model: init + pure apply.
+
+    ``apply(params, graph, h, rng, train) -> h`` — the graph rides along the
+    carry, mirroring the paper's (node-indices, features) tuple workaround,
+    minus the workaround: pytrees make it first-class.
+    """
+
+    name: str
+    init: Callable[[jax.Array], Any]
+    apply: Callable[[Any, GraphBatch, jax.Array, jax.Array | None, bool], jax.Array]
+
+
+def _dropout_layer(rate: float, name: str) -> SeqLayer:
+    return SeqLayer(
+        name=name,
+        init=lambda key: {},
+        apply=lambda p, g, h, rng, train: L.dropout(h, rate, rng, train),
+    )
+
+
+def _elu_layer() -> SeqLayer:
+    return SeqLayer("elu", lambda key: {}, lambda p, g, h, rng, train: jax.nn.elu(h))
+
+
+def _log_softmax_layer() -> SeqLayer:
+    return SeqLayer(
+        "log_softmax", lambda key: {}, lambda p, g, h, rng, train: jax.nn.log_softmax(h, axis=-1)
+    )
+
+
+def _gat_seq_layer(
+    name: str,
+    in_dim: int,
+    out_dim: int,
+    *,
+    heads: int,
+    concat: bool,
+    attn_dropout: float,
+    backend: str,
+) -> SeqLayer:
+    def apply(p, g, h, rng, train):
+        return L.gat_layer(
+            p,
+            g,
+            h,
+            concat=concat,
+            attn_dropout=attn_dropout if backend != "pallas" else 0.0,
+            rng=rng,
+            train=train,
+            backend=backend,
+        )
+
+    return SeqLayer(name, lambda key: L.init_gat(key, in_dim, out_dim, heads=heads), apply)
+
+
+def _gcn_seq_layer(name: str, in_dim: int, out_dim: int, *, backend: str) -> SeqLayer:
+    return SeqLayer(
+        name,
+        lambda key: L.init_gcn(key, in_dim, out_dim),
+        lambda p, g, h, rng, train: L.gcn_layer(p, g, h, backend=backend),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNModel:
+    layers: tuple[SeqLayer, ...]
+    in_dim: int
+    out_dim: int
+
+    def init_params(self, key: jax.Array) -> list:
+        keys = jax.random.split(key, len(self.layers))
+        return [layer.init(k) for layer, k in zip(self.layers, keys)]
+
+    def apply(
+        self,
+        params: list,
+        g: GraphBatch,
+        h: jax.Array | None = None,
+        *,
+        rng: jax.Array | None = None,
+        train: bool = False,
+    ) -> jax.Array:
+        h = g.features if h is None else h
+        rngs = (
+            jax.random.split(rng, len(self.layers))
+            if rng is not None
+            else [None] * len(self.layers)
+        )
+        for layer, p, r in zip(self.layers, params, rngs):
+            h = layer.apply(p, g, h, r, train)
+        return h
+
+    def num_params(self, params: list) -> int:
+        return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def build_paper_gat(
+    num_features: int,
+    num_classes: int,
+    *,
+    hidden_per_head: int = 8,
+    heads: int = 8,
+    feat_dropout: float = 0.6,
+    attn_dropout: float = 0.6,
+    backend: str = "padded",
+) -> GNNModel:
+    """The exact model of paper §6 (GAT defaults of Veličković et al.)."""
+    layers = (
+        _dropout_layer(feat_dropout, "dropout_0"),
+        _gat_seq_layer(
+            "gat_0",
+            num_features,
+            hidden_per_head,
+            heads=heads,
+            concat=True,
+            attn_dropout=attn_dropout,
+            backend=backend,
+        ),
+        _elu_layer(),
+        _dropout_layer(feat_dropout, "dropout_1"),
+        _gat_seq_layer(
+            "gat_1",
+            hidden_per_head * heads,
+            num_classes,
+            heads=heads,
+            concat=False,
+            attn_dropout=attn_dropout,
+            backend=backend,
+        ),
+        _log_softmax_layer(),
+    )
+    return GNNModel(layers=layers, in_dim=num_features, out_dim=num_classes)
+
+
+def build_gnn(
+    kind: str,
+    num_features: int,
+    num_classes: int,
+    *,
+    hidden: int = 64,
+    depth: int = 2,
+    backend: str = "padded",
+) -> GNNModel:
+    """Generic builders for the future-work §8 model zoo (GCN / GraphConv /
+    GatedGraphConv), assembled in the same sequential form."""
+    if kind == "gat":
+        return build_paper_gat(num_features, num_classes, backend=backend)
+
+    layers: list[SeqLayer] = []
+    dims = [num_features] + [hidden] * (depth - 1) + [num_classes]
+    for i in range(depth):
+        din, dout = dims[i], dims[i + 1]
+        if kind == "gcn":
+            layers.append(_gcn_seq_layer(f"gcn_{i}", din, dout, backend=backend))
+        elif kind == "graphconv":
+            layers.append(
+                SeqLayer(
+                    f"graphconv_{i}",
+                    (lambda din=din, dout=dout: (lambda key: L.init_graph_conv(key, din, dout)))(),
+                    lambda p, g, h, rng, train: L.graph_conv_layer(p, g, h, backend=backend),
+                )
+            )
+        elif kind == "gatedgraphconv":
+            if din != dout:
+                layers.append(_gcn_seq_layer(f"proj_{i}", din, dout, backend=backend))
+            layers.append(
+                SeqLayer(
+                    f"ggc_{i}",
+                    (lambda dout=dout: (lambda key: L.init_gated_graph_conv(key, dout)))(),
+                    lambda p, g, h, rng, train: L.gated_graph_conv_layer(p, g, h, backend=backend),
+                )
+            )
+        else:
+            raise KeyError(f"unknown GNN kind {kind!r}")
+        if i < depth - 1:
+            layers.append(_elu_layer())
+    layers.append(_log_softmax_layer())
+    return GNNModel(layers=tuple(layers), in_dim=num_features, out_dim=num_classes)

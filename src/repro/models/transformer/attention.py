@@ -1,0 +1,139 @@
+"""Attention: blocked online-softmax (flash-style, pure JAX) + decode paths.
+
+``blocked_attention`` scans KV blocks with a running (max, sum, acc) — the
+memory-bounded formulation that makes prefill_32k lowerable (scores for the
+full (S, S) square are never materialized). Handles GQA head grouping,
+sliding windows (gemma2 / long-context fallback), attention softcap, and
+arbitrary query/key positions.
+
+``decode_attention`` is the single-new-token path against a KV cache. With
+``axis`` set it combines per-shard partial softmax statistics with ``psum``
+over a mesh axis — flash-decoding over a sequence-sharded cache, used by
+long_500k where batch=1 leaves the data axis otherwise idle (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.transformer.common import softcap as _softcap
+
+_NEG = -2.0e38  # large negative for f32 masking (avoid inf-inf NaNs)
+
+
+def _mask_bias(q_pos, kv_pos, window: jax.Array | int):
+    """(Sq, Skv) additive mask: causal + optional sliding window.
+
+    ``window`` may be a traced scalar (per-layer extras); 0 disables."""
+    causal = kv_pos[None, :] <= q_pos[:, None]
+    dist_ok = (q_pos[:, None] - kv_pos[None, :]) < jnp.maximum(window, 1)
+    use_window = window > 0
+    ok = causal & jnp.where(use_window, dist_ok, True)
+    return jnp.where(ok, 0.0, _NEG)
+
+
+def blocked_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Skv, KV, hd)
+    v: jax.Array,  # (B, Skv, KV, hd)
+    *,
+    q_pos: jax.Array,  # (Sq,)
+    kv_pos: jax.Array,  # (Skv,)
+    window: jax.Array | int = 0,
+    attn_softcap: float = 0.0,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Causal attention, O(Sq * kv_block) live memory. Returns (B,Sq,H,hd_v).
+    K and V head dims may differ (MLA)."""
+    b, sq, h, hd = q.shape
+    skv, kv_heads = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    g = h // kv_heads
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    qg = q.reshape(b, sq, kv_heads, g, hd).astype(jnp.float32) * scale
+
+    nblk = max(1, (skv + kv_block - 1) // kv_block)
+    pad = nblk * kv_block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    kb = k.reshape(b, nblk, kv_block, kv_heads, hd)
+    vb = v.reshape(b, nblk, kv_block, kv_heads, hd_v)
+    pb = kv_pos.reshape(nblk, kv_block)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, p_i = xs  # (B, kv_block, KV, hd), ..., (kv_block,)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k_i.astype(jnp.float32))
+        if attn_softcap > 0:
+            s = _softcap(s, attn_softcap)
+        bias = _mask_bias(q_pos, p_i, window)  # (Sq, kv_block)
+        s = s + bias[None, None, None]
+        valid = bias > _NEG / 2
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * valid[None, None, None]
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    from repro.core.vma import match_vma
+
+    m0 = jnp.full((b, kv_heads, g, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, kv_heads, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv_heads, g, sq, hd_v), jnp.float32)
+    (m0, l0, a0) = match_vma((m0, l0, a0), qg, kb, vb, pb)
+    (m, l, acc), _ = lax.scan(
+        body,
+        (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), pb),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, Sq, hd_v)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hd_v)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, H, hd) — one new token
+    k_cache: jax.Array,  # (B, Skv_local, KV, hd)
+    v_cache: jax.Array,  # (B, Skv_local, KV, hd)
+    kv_pos: jax.Array,  # (Skv_local,) global positions; < 0 marks empty slots
+    cur_pos: jax.Array,  # scalar — position of the new token
+    *,
+    window: jax.Array | int = 0,
+    attn_softcap: float = 0.0,
+    axis: str | None = None,  # psum partial-softmax over this mesh axis
+) -> jax.Array:
+    """Single-token attention against a (possibly axis-sharded) cache."""
+    b, h, hd = q.shape
+    kv_heads = k_cache.shape[2]
+    g = h // kv_heads
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qg = q.reshape(b, kv_heads, g, hd).astype(jnp.float32) * scale
+
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache.astype(jnp.float32))
+    if attn_softcap > 0:
+        s = _softcap(s, attn_softcap)
+    ok = (kv_pos >= 0) & (kv_pos <= cur_pos)
+    if not isinstance(window, int) or window != 0:
+        dist_ok = (cur_pos - kv_pos) < jnp.maximum(window, 1)
+        ok = ok & jnp.where(window > 0, dist_ok, True)
+    s = jnp.where(ok[None, None, None], s, _NEG)
+
+    m = jnp.max(s, axis=-1)
+    if axis is not None:
+        m = lax.pmax(m, axis)
+    p = jnp.exp(s - m[..., None]) * ok[None, None, None]
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
+    if axis is not None:
+        l = lax.psum(l, axis)
+        acc = lax.psum(acc, axis)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, v_cache.shape[-1]).astype(q.dtype)

@@ -1,0 +1,454 @@
+"""Per-architecture transformer blocks (one layer slot) — init + train/decode.
+
+A block is the unit the pipeline scans. All slots of an arch share one
+homogeneous params pytree; heterogeneity rides in ``extras``:
+
+    active : f32  — 0 on pipeline-padding slots (block becomes identity)
+    window : i32  — sliding-window size for this layer (0 = global)
+
+Hybrid (zamba2) is assembled at the *stage* level in model.py (5 scanned
+mamba slots + 1 weight-shared attention slot) so its KV cache exists only
+where attention does.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer.attention import blocked_attention, decode_attention
+from repro.models.transformer.common import apply_mrope, apply_rope, normal_init, rms_norm
+from repro.models.transformer.ffn import ffn_apply, ffn_init
+from repro.models.transformer.moe import moe_apply, moe_init
+from repro.models.transformer.ssm import mamba2_apply, mamba2_init
+
+
+# ------------------------------------------------------------------ init --
+
+
+def init_attn_params(cfg: ArchConfig, key: jax.Array, *, dtype=jnp.bfloat16) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 10)
+    if cfg.attn_kind == "mla":
+        qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        p = {
+            "w_dq": normal_init(ks[0], (d, cfg.q_lora_rank), dtype=dtype),
+            "ln_q": jnp.zeros((cfg.q_lora_rank,), dtype),
+            "w_uq": normal_init(ks[1], (cfg.q_lora_rank, h * qk), dtype=dtype),
+            "w_dkv": normal_init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim), dtype=dtype),
+            "ln_kv": jnp.zeros((cfg.kv_lora_rank,), dtype),
+            "w_uk": normal_init(ks[3], (cfg.kv_lora_rank, h * cfg.qk_nope_head_dim), dtype=dtype),
+            "w_uv": normal_init(ks[4], (cfg.kv_lora_rank, h * cfg.v_head_dim), dtype=dtype),
+            "w_o": normal_init(ks[5], (h * cfg.v_head_dim, d), dtype=dtype),
+        }
+        return p
+    p = {
+        "w_q": normal_init(ks[0], (d, h * hd), dtype=dtype),
+        "w_k": normal_init(ks[1], (d, kv * hd), dtype=dtype),
+        "w_v": normal_init(ks[2], (d, kv * hd), dtype=dtype),
+        "w_o": normal_init(ks[3], (h * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h * hd,), dtype)
+        p["b_k"] = jnp.zeros((kv * hd,), dtype)
+        p["b_v"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def init_block(cfg: ArchConfig, key: jax.Array, *, dtype=jnp.bfloat16) -> dict:
+    """One attention(+FFN/MoE) layer slot."""
+    d = cfg.d_model
+    k_attn, k_ffn, k_norm = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.zeros((d,), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "attn": init_attn_params(cfg, k_attn, dtype=dtype),
+    }
+    if cfg.sandwich_norms:
+        p["ln1_post"] = jnp.zeros((d,), dtype)
+        p["ln2_post"] = jnp.zeros((d,), dtype)
+    if cfg.num_experts:
+        p["moe"] = moe_init(
+            k_ffn,
+            d,
+            cfg.d_ff,
+            num_experts=cfg.num_experts,
+            num_shared=cfg.num_shared_experts,
+            dense_residual=cfg.moe_dense_residual,
+            router_kind=cfg.router_kind,
+            mlp_kind=cfg.mlp_kind,
+            dtype=dtype,
+        )
+    else:
+        p["ffn"] = ffn_init(k_ffn, d, cfg.d_ff, kind=cfg.mlp_kind, dtype=dtype)
+    return p
+
+
+def init_mamba_block(cfg: ArchConfig, key: jax.Array, *, dtype=jnp.bfloat16) -> dict:
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "mamba": mamba2_init(
+            key,
+            cfg.d_model,
+            expand=cfg.ssm_expand,
+            head_dim=cfg.ssm_head_dim,
+            n_state=cfg.ssm_state,
+            conv_width=cfg.ssm_conv_width,
+            dtype=dtype,
+        ),
+    }
+
+
+# ------------------------------------------------------------ attention --
+
+
+def _project_qkv(cfg: ArchConfig, p: dict, h_in: jax.Array, positions: jax.Array):
+    """-> (q (B,S,H,hd'), k (B,S,KV,hd'), v (B,S,KV,vd), cache_entry).
+    ``cache_entry`` is what prefill persists: {'k','v'} post-rope for GQA,
+    the compressed {'ckv'} (= ckv ‖ k_rope) for MLA."""
+    b, s, _ = h_in.shape
+    if cfg.attn_kind == "mla":
+        qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        cq = rms_norm(h_in @ p["w_dq"], p["ln_q"], eps=cfg.norm_eps)
+        q = (cq @ p["w_uq"]).reshape(b, s, cfg.num_heads, qk)
+        q_nope, q_rope = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+        q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+
+        dkv = h_in @ p["w_dkv"]
+        ckv, k_rope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+        ckv = rms_norm(ckv, p["ln_kv"], eps=cfg.norm_eps)
+        k_rope = apply_rope(k_rope[:, :, None, :], positions, theta=cfg.rope_theta)
+        k_nope = (ckv @ p["w_uk"]).reshape(b, s, cfg.num_heads, cfg.qk_nope_head_dim)
+        v = (ckv @ p["w_uv"]).reshape(b, s, cfg.num_heads, cfg.v_head_dim)
+
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:-1], cfg.qk_rope_head_dim))],
+            axis=-1,
+        )
+        entry = {"ckv": jnp.concatenate([ckv, k_rope[:, :, 0]], axis=-1)}
+        return q, k, v, entry
+
+    hd = cfg.head_dim
+    q = h_in @ p["w_q"]
+    k = h_in @ p["w_k"]
+    v = h_in @ p["w_v"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.rope_kind == "mrope":
+        q = apply_mrope(q, positions, theta=cfg.rope_theta)
+        k = apply_mrope(k, positions, theta=cfg.rope_theta)
+    elif cfg.rope_kind == "rope":
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v, {"k": k, "v": v}
+
+
+def attn_apply(
+    cfg: ArchConfig,
+    p: dict,
+    h_in: jax.Array,
+    *,
+    positions: jax.Array,
+    window,
+    kv_block: int = 512,
+    return_cache: bool = False,
+    backend: str = "blocked",  # "blocked" (pure jnp) | "flash" (Pallas)
+):
+    b, s, _ = h_in.shape
+    q, k, v, entry = _project_qkv(cfg, p, h_in, positions)
+    lin = positions[0] if cfg.rope_kind == "mrope" else positions  # causal order
+    if backend == "flash" and s % 128 == 0 and isinstance(window, int):
+        from repro.kernels.flash.ops import flash_attention
+
+        out = flash_attention(q, k, v, window, cfg.attn_softcap, 128, 128)
+    else:
+        out = blocked_attention(
+            q, k, v,
+            q_pos=lin, kv_pos=lin,
+            window=window,
+            attn_softcap=cfg.attn_softcap,
+            kv_block=kv_block,
+        )
+    out = out.reshape(b, s, -1) @ p["w_o"]
+    if return_cache:
+        return out, entry
+    return out
+
+
+def ring_positions(cur_pos: jax.Array, w_local: int, *, seq_axis: str | None = None, w_total: int | None = None) -> jax.Array:
+    """Global positions held by ring-buffer slots, derived (not stored):
+    slot i holds p_i = cur_pos - ((cur_pos - i) mod W); p_i < 0 ⇒ empty.
+    Valid because serving fills positions contiguously 0..cur_pos."""
+    w_total = w_total or w_local
+    idx = jnp.arange(w_local, dtype=jnp.int32)
+    if seq_axis is not None:
+        idx = idx + lax.axis_index(seq_axis).astype(jnp.int32) * w_local
+    return cur_pos - ((cur_pos - idx) % w_total)
+
+
+def attn_decode_apply(
+    cfg: ArchConfig,
+    p: dict,
+    h_in: jax.Array,  # (B, 1, d)
+    cache: dict,  # {'k','v'} or {'ckv'} (mla), ring-buffer on dim 1
+    *,
+    cur_pos: jax.Array,
+    window,
+    seq_axis: str | None = None,
+    seq_shards: int = 1,
+) -> tuple[jax.Array, dict]:
+    b = h_in.shape[0]
+    pos_vec = (
+        jnp.full((3, 1), cur_pos, jnp.int32) if cfg.rope_kind == "mrope" else jnp.full((1,), cur_pos, jnp.int32)
+    )
+    q, k_new, v_new, entry_new = _project_qkv(cfg, p, h_in, pos_vec)
+    q = q[:, 0]  # (B, H, hd)
+
+    w_local = (cache["ckv"] if cfg.attn_kind == "mla" else cache["k"]).shape[1]
+    w_total = w_local * seq_shards
+    slot = cur_pos % w_total
+    if seq_axis is not None:
+        owner = slot // w_local
+        local_slot = slot - owner * w_local
+        mine = lax.axis_index(seq_axis) == owner
+    else:
+        local_slot = slot
+        mine = jnp.asarray(True)
+
+    def wr(buf, new):
+        upd = lax.dynamic_update_index_in_dim(buf, new, local_slot, axis=1)
+        return jnp.where(mine, upd, buf)
+
+    if cfg.attn_kind == "mla":
+        # compressed cache: ckv (B, W, r + rope_dim)
+        cache = dict(cache, ckv=wr(cache["ckv"], entry_new["ckv"][:, 0]))
+        # expand cached ckv -> k, v (recompute form)
+        ckv_all, kr_all = jnp.split(cache["ckv"], [cfg.kv_lora_rank], axis=-1)
+        k_nope = (ckv_all @ p["w_uk"]).reshape(b, w_local, cfg.num_heads, cfg.qk_nope_head_dim)
+        v_all = (ckv_all @ p["w_uv"]).reshape(b, w_local, cfg.num_heads, cfg.v_head_dim)
+        k_all = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :], (*k_nope.shape[:-1], cfg.qk_rope_head_dim))],
+            axis=-1,
+        )
+    else:
+        cache = dict(cache, k=wr(cache["k"], k_new[:, 0]), v=wr(cache["v"], v_new[:, 0]))
+        k_all, v_all = cache["k"], cache["v"]
+
+    kv_pos = ring_positions(cur_pos, w_local, seq_axis=seq_axis, w_total=w_total)
+    out = decode_attention(
+        q, k_all, v_all, kv_pos, cur_pos,
+        window=window, attn_softcap=cfg.attn_softcap, axis=seq_axis,
+    )
+    return out.reshape(b, 1, -1) @ p["w_o"], cache
+
+
+def init_attn_cache(cfg: ArchConfig, mb: int, w_local: int, *, dtype=jnp.bfloat16) -> dict:
+    """One layer's decode cache (local shard of width w_local). Positions are
+    implicit (ring_positions)."""
+    if cfg.attn_kind == "mla":
+        return {
+            "ckv": jnp.zeros((mb, w_local, cfg.kv_lora_rank + cfg.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((mb, w_local, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((mb, w_local, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------- blocks --
+
+
+def _ffn_or_moe(cfg: ArchConfig, p: dict, x: jax.Array, *, ep_axis, ep_size, moe_mode) -> jax.Array:
+    if cfg.num_experts:
+        b, s, d = x.shape
+        out, _aux = moe_apply(
+            p["moe"],
+            x.reshape(b * s, d),
+            num_experts=cfg.num_experts,
+            k=cfg.experts_per_token,
+            router_kind=cfg.router_kind,
+            mlp_kind=cfg.mlp_kind,
+            ep_axis=ep_axis,
+            ep_size=ep_size,
+            mode=moe_mode,
+        )
+        return out.reshape(b, s, d)
+    return ffn_apply(p["ffn"], x, kind=cfg.mlp_kind)
+
+
+def block_train(
+    cfg: ArchConfig,
+    lp: dict,
+    ex: dict,
+    h: jax.Array,
+    *,
+    positions: jax.Array,
+    ep_axis: str | None = None,
+    ep_size: int = 1,
+    moe_mode: str = "gathered",
+    kv_block: int = 512,
+    attn_backend: str = "blocked",
+) -> jax.Array:
+    """One attention(+FFN) layer, full-sequence (train/prefill)."""
+
+    def run(h):
+        a = attn_apply(
+            cfg, lp["attn"], rms_norm(h, lp["ln1"], eps=cfg.norm_eps),
+            positions=positions, window=ex["window"], kv_block=kv_block,
+            backend=attn_backend,
+        )
+        if cfg.sandwich_norms:
+            a = rms_norm(a, lp["ln1_post"], eps=cfg.norm_eps)
+        h = h + a
+        f = _ffn_or_moe(
+            cfg, lp, rms_norm(h, lp["ln2"], eps=cfg.norm_eps),
+            ep_axis=ep_axis, ep_size=ep_size, moe_mode=moe_mode,
+        )
+        if cfg.sandwich_norms:
+            f = rms_norm(f, lp["ln2_post"], eps=cfg.norm_eps)
+        return h + f
+
+    return jnp.where(ex["active"] > 0, run(h), h)
+
+
+def block_decode(
+    cfg: ArchConfig,
+    lp: dict,
+    ex: dict,
+    h: jax.Array,
+    cache: dict,
+    *,
+    cur_pos: jax.Array,
+    ep_axis: str | None = None,
+    ep_size: int = 1,
+    moe_mode: str = "gathered",
+    seq_axis: str | None = None,
+    seq_shards: int = 1,
+) -> tuple[jax.Array, dict]:
+    def run(h, cache):
+        a, cache = attn_decode_apply(
+            cfg, lp["attn"], rms_norm(h, lp["ln1"], eps=cfg.norm_eps), cache,
+            cur_pos=cur_pos, window=ex["window"], seq_axis=seq_axis, seq_shards=seq_shards,
+        )
+        if cfg.sandwich_norms:
+            a = rms_norm(a, lp["ln1_post"], eps=cfg.norm_eps)
+        h = h + a
+        f = _ffn_or_moe(
+            cfg, lp, rms_norm(h, lp["ln2"], eps=cfg.norm_eps),
+            ep_axis=ep_axis, ep_size=ep_size, moe_mode=moe_mode,
+        )
+        if cfg.sandwich_norms:
+            f = rms_norm(f, lp["ln2_post"], eps=cfg.norm_eps)
+        return h + f, cache
+
+    h_new, cache_new = run(h, cache)
+    active = ex["active"] > 0
+    h_out = jnp.where(active, h_new, h)
+    cache_out = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(active, new, old), cache_new, cache
+    )
+    return h_out, cache_out
+
+
+def mamba_block_train(cfg: ArchConfig, lp: dict, ex: dict, h: jax.Array) -> jax.Array:
+    def run(h):
+        y, _ = mamba2_apply(
+            lp["mamba"], rms_norm(h, lp["ln1"], eps=cfg.norm_eps),
+            expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+            n_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+        )
+        return h + y
+
+    return jnp.where(ex["active"] > 0, run(h), h)
+
+
+def mamba_block_decode(
+    cfg: ArchConfig, lp: dict, ex: dict, h: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    y, (ssm, conv) = mamba2_apply(
+        lp["mamba"], rms_norm(h, lp["ln1"], eps=cfg.norm_eps),
+        expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+        n_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+        ssm_state=cache["ssm"], conv_state=cache["conv"], decode=True,
+    )
+    active = ex["active"] > 0
+    h_out = jnp.where(active, h + y, h)
+    cache_out = {
+        "ssm": jnp.where(active, ssm, cache["ssm"]),
+        "conv": jnp.where(active, conv, cache["conv"]),
+    }
+    return h_out, cache_out
+
+
+def block_prefill(
+    cfg: ArchConfig,
+    lp: dict,
+    ex: dict,
+    h: jax.Array,
+    cache: dict,
+    *,
+    positions: jax.Array,
+    ep_axis: str | None = None,
+    ep_size: int = 1,
+    moe_mode: str = "gathered",
+    kv_block: int = 512,
+) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that also emits this layer's KV cache (the real
+    serving prefill). Cache entry shapes match ``init_attn_cache`` with
+    w_local == seq_len (positions arrive already valid)."""
+    a, entry = attn_apply(
+        cfg, lp["attn"], rms_norm(h, lp["ln1"], eps=cfg.norm_eps),
+        positions=positions, window=ex["window"], kv_block=kv_block, return_cache=True,
+    )
+    if cfg.sandwich_norms:
+        a = rms_norm(a, lp["ln1_post"], eps=cfg.norm_eps)
+    h_new = h + a
+    f = _ffn_or_moe(
+        cfg, lp, rms_norm(h_new, lp["ln2"], eps=cfg.norm_eps),
+        ep_axis=ep_axis, ep_size=ep_size, moe_mode=moe_mode,
+    )
+    if cfg.sandwich_norms:
+        f = rms_norm(f, lp["ln2_post"], eps=cfg.norm_eps)
+    h_new = h_new + f
+
+    active = ex["active"] > 0
+    new_cache = {
+        k_: jnp.where(active, entry[k_].astype(cache[k_].dtype), cache[k_]) for k_ in entry
+    }
+    return jnp.where(active, h_new, h), new_cache
+
+
+def mamba_block_prefill(
+    cfg: ArchConfig, lp: dict, ex: dict, h: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    """Full-sequence mamba forward emitting the final recurrent state."""
+    y, (ssm, conv) = mamba2_apply(
+        lp["mamba"], rms_norm(h, lp["ln1"], eps=cfg.norm_eps),
+        expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+        n_state=cfg.ssm_state, chunk=cfg.ssm_chunk,
+        ssm_state=cache["ssm"] * 0.0, conv_state=None, decode=False,
+    )
+    active = ex["active"] > 0
+    return (
+        jnp.where(active, h + y, h),
+        {
+            "ssm": jnp.where(active, ssm, cache["ssm"]),
+            "conv": jnp.where(active, conv.astype(cache["conv"].dtype), cache["conv"]),
+        },
+    )
+
+
+def init_mamba_cache(cfg: ArchConfig, mb: int, *, dtype=jnp.bfloat16) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((mb, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((mb, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }

@@ -1,0 +1,69 @@
+"""Shared transformer primitives: norms, rope/m-rope, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+def normal_init(key: jax.Array, shape, *, scale: float = 0.02, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ rope --
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: broadcastable to
+    (..., S) int32. Rotates the full head_dim (half-split convention)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, *, theta: float, sections=(2, 1, 1)
+) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): positions (3, ..., S) for (t, h, w); the
+    head_dim/2 frequency slots are split across the three components in
+    ``sections`` proportion."""
+    hd = x.shape[-1]
+    half = hd // 2
+    total = sum(sections)
+    sizes = [half * s // total for s in sections]
+    sizes[-1] = half - sum(sizes[:-1])
+    inv = rope_freqs(hd, theta)  # (half,)
+    # build a per-slot position by selecting the component for its section
+    comp = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sizes), total_repeat_length=half
+    )  # (half,) in {0,1,2}
+    pos = positions[comp]  # (half, ..., S) — gather over leading axis
+    pos = jnp.moveaxis(pos, 0, -1)  # (..., S, half)
+    ang = pos.astype(jnp.float32) * inv
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

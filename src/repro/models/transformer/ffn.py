@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU-MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ffn_apply(p: dict, x: jax.Array, *, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "gelu":
+        return jax.nn.gelu(x @ p["w_up"]) @ p["w_down"]
+    raise KeyError(f"unknown mlp kind {kind!r}")
+
+
+def ffn_init(key: jax.Array, d: int, ff: int, *, kind: str, dtype=jnp.bfloat16) -> dict:
+    from repro.models.transformer.common import normal_init
+
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": normal_init(ks[0], (d, ff), dtype=dtype),
+            "w_up": normal_init(ks[1], (d, ff), dtype=dtype),
+            "w_down": normal_init(ks[2], (ff, d), dtype=dtype),
+        }
+    return {
+        "w_up": normal_init(ks[1], (d, ff), dtype=dtype),
+        "w_down": normal_init(ks[2], (ff, d), dtype=dtype),
+    }

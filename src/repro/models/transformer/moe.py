@@ -1,0 +1,227 @@
+"""Mixture-of-Experts with expert parallelism over a mesh axis.
+
+Routing is sort-based capacity dispatch (no O(T·E·C) one-hot matmuls — those
+would pollute the compute roofline with fake FLOPs):
+
+  token→expert assignments are argsorted by expert id, each expert keeps its
+  first ``capacity`` tokens, a (E_local, capacity) gather table dispatches,
+  and a scatter-add combines weighted expert outputs.
+
+Expert parallelism ("gathered" mode — the paper-era baseline recorded in
+EXPERIMENTS.md, with all_to_all dispatch as the hillclimb variant): expert
+weights live sharded over ``ep_axis`` (leading E dim); tokens are
+all-gathered over that axis, every device runs its local experts, and a
+``psum_scatter`` returns each device its own tokens' combined outputs. The
+alternative ``a2a`` mode moves only routed tokens with two all_to_alls.
+
+Supports: softmax top-k (standard), sigmoid+bias selection (deepseek-v3
+aux-free), shared experts, and arctic's parallel dense residual.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.transformer.common import normal_init
+from repro.models.transformer.ffn import ffn_apply, ffn_init
+
+
+def moe_init(
+    key: jax.Array,
+    d: int,
+    ff: int,
+    *,
+    num_experts: int,
+    num_shared: int = 0,
+    dense_residual: bool = False,
+    router_kind: str = "softmax",
+    mlp_kind: str = "swiglu",
+    dtype=jnp.bfloat16,
+) -> dict:
+    ks = jax.random.split(key, 8)
+    p = {
+        "router": normal_init(ks[0], (d, num_experts), scale=0.006, dtype=jnp.float32),
+        "we_gate": normal_init(ks[1], (num_experts, d, ff), dtype=dtype),
+        "we_up": normal_init(ks[2], (num_experts, d, ff), dtype=dtype),
+        "we_down": normal_init(ks[3], (num_experts, ff, d), dtype=dtype),
+    }
+    if router_kind == "sigmoid":
+        p["router_bias"] = jnp.zeros((num_experts,), jnp.float32)
+    if num_shared:
+        p["shared"] = ffn_init(ks[4], d, ff * num_shared, kind=mlp_kind, dtype=dtype)
+    if dense_residual:
+        p["dense"] = ffn_init(ks[5], d, ff, kind=mlp_kind, dtype=dtype)
+    return p
+
+
+def _route(p: dict, x: jax.Array, *, k: int, router_kind: str):
+    """-> (topk_idx (T,k) int32, topk_w (T,k) f32, aux_loss scalar)."""
+    logits = x.astype(jnp.float32) @ p["router"]  # (T, E)
+    e = logits.shape[-1]
+    if router_kind == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + p["router_bias"][None, :]
+        _, idx = lax.top_k(sel, k)
+        w = jnp.take_along_axis(scores, idx, axis=-1)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(scores.sum(-1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = lax.top_k(probs, k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balance aux: E * Σ_e f_e · P_e
+    f = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / idx.size
+    pbar = probs.mean(axis=0)
+    aux = e * jnp.sum(f * pbar)
+    return idx.astype(jnp.int32), w, aux
+
+
+def _dispatch_tables(idx: jax.Array, w: jax.Array, *, num_experts: int, e0, e_local: int, capacity: int):
+    """Sort-based dispatch. Returns (token_table (E_local, C) int32,
+    weight_table (E_local, C) f32) — token_table rows index into the gathered
+    token array; empty slots point at token 0 with weight 0."""
+    t, k = idx.shape
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = w.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(flat_e, length=num_experts)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+
+    local = (se >= e0) & (se < e0 + e_local) & (pos < capacity)
+    slot = jnp.where(local, (se - e0) * capacity + pos, e_local * capacity)
+
+    tok_table = jnp.zeros((e_local * capacity + 1,), jnp.int32).at[slot].set(st, mode="drop")
+    w_table = jnp.zeros((e_local * capacity + 1,), jnp.float32).at[slot].set(sw, mode="drop")
+    return (
+        tok_table[:-1].reshape(e_local, capacity),
+        w_table[:-1].reshape(e_local, capacity),
+    )
+
+
+def _expert_ffn(p: dict, xin: jax.Array, *, mlp_kind: str) -> jax.Array:
+    """xin: (E_local, C, d) with per-expert weights (E_local, d, ff)."""
+    if mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if mlp_kind == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", xin, p["we_gate"])) * jnp.einsum(
+            "ecd,edf->ecf", xin, p["we_up"]
+        )
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xin, p["we_up"]))
+    return jnp.einsum("ecf,efd->ecd", h, p["we_down"])
+
+
+def moe_apply(
+    p: dict,
+    x: jax.Array,  # (T, d) local tokens
+    *,
+    num_experts: int,
+    k: int,
+    router_kind: str = "softmax",
+    mlp_kind: str = "swiglu",
+    capacity_factor: float = 1.25,
+    ep_axis: str | None = None,
+    ep_size: int = 1,
+    mode: str = "gathered",  # "gathered" | "a2a" | "replicated"
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (out (T, d), aux_loss). Expert leaves in ``p`` are LOCAL
+    shards (E_local = num_experts / ep_size) when ep_axis is set.
+
+    ``replicated`` mode: tokens are identical on every ep_axis device (e.g.
+    batch=1 long-context decode); each device runs its local experts and the
+    combined output is psum'd — no token gather/scatter at all."""
+    t, d = x.shape
+    idx, w, aux = _route(p, x, k=k, router_kind=router_kind)
+
+    if ep_axis is not None and mode == "gathered":
+        xg = lax.all_gather(x, ep_axis, axis=0, tiled=True)  # (T_all, d)
+        idx = lax.all_gather(idx, ep_axis, axis=0, tiled=True)
+        w = lax.all_gather(w, ep_axis, axis=0, tiled=True)
+    else:
+        xg = x
+    t_all = xg.shape[0]
+
+    e_local = num_experts // ep_size
+    e0 = (lax.axis_index(ep_axis) * e_local) if ep_axis is not None else 0
+    capacity = max(8, math.ceil(t_all * k / num_experts * capacity_factor))
+
+    if ep_axis is not None and mode == "a2a":
+        out = _moe_a2a(
+            p, x, idx, w,
+            num_experts=num_experts, e_local=e_local, e0=e0,
+            capacity=max(8, math.ceil(t * k / num_experts * capacity_factor)),
+            ep_axis=ep_axis, ep_size=ep_size, mlp_kind=mlp_kind,
+        )
+    else:
+        tok_table, w_table = _dispatch_tables(
+            idx, w, num_experts=num_experts, e0=e0, e_local=e_local, capacity=capacity
+        )
+        xin = xg[tok_table]  # (E_local, C, d)
+        yout = _expert_ffn(p, xin, mlp_kind=mlp_kind)
+        contrib = (yout * w_table[..., None]).astype(jnp.float32)
+        out_g = jnp.zeros((t_all, d), jnp.float32).at[tok_table.reshape(-1)].add(
+            contrib.reshape(-1, d)
+        )
+        if ep_axis is not None and mode == "gathered":
+            out = lax.psum_scatter(out_g, ep_axis, scatter_dimension=0, tiled=True)
+        elif ep_axis is not None and mode == "replicated":
+            out = lax.psum(out_g, ep_axis)
+        else:
+            out = out_g
+    out = out.astype(x.dtype)
+
+    if "shared" in p:
+        out = out + ffn_apply(p["shared"], x, kind=mlp_kind)
+    if "dense" in p:
+        out = out + ffn_apply(p["dense"], x, kind=mlp_kind)
+    return out, aux
+
+
+def _moe_a2a(
+    p, x, idx, w, *, num_experts, e_local, e0, capacity, ep_axis, ep_size, mlp_kind
+):
+    """all_to_all expert parallelism (beyond-paper §Perf variant): each device
+    packs per-destination-device expert buffers from its LOCAL tokens only,
+    all_to_alls them, runs local experts, and all_to_alls results back.
+    Moves ~k/E·T·ep_size× less data than the gathered baseline."""
+    t, d = x.shape
+    # local dispatch tables for EVERY destination device: (ep, E_local, C)
+    tok_tabs = []
+    w_tabs = []
+    for dev in range(ep_size):
+        tt, wt = _dispatch_tables(
+            idx, w, num_experts=num_experts, e0=dev * e_local, e_local=e_local, capacity=capacity
+        )
+        tok_tabs.append(tt)
+        w_tabs.append(wt)
+    tok_tab = jnp.stack(tok_tabs)  # (ep, E_local, C)
+    w_tab = jnp.stack(w_tabs)
+    send = x[tok_tab]  # (ep, E_local, C, d) — buffers for each dest device
+    # exchange: device i sends slice j to device j
+    recv = lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=0, tiled=True)
+    recv = recv.reshape(ep_size, e_local, capacity, d)  # by source device
+    # run experts: the same local expert weights serve every source device
+    yout = _expert_ffn_by_source(p, recv, mlp_kind=mlp_kind)
+    back = lax.all_to_all(
+        yout.reshape(ep_size, e_local, capacity, d), ep_axis, split_axis=0, concat_axis=0, tiled=True
+    ).reshape(ep_size, e_local, capacity, d)
+    out = jnp.zeros((t, d), jnp.float32)
+    flat_tok = tok_tab.reshape(-1)
+    contrib = (back.reshape(ep_size, e_local, capacity, d) * w_tab[..., None]).astype(jnp.float32)
+    out = out.at[flat_tok].add(contrib.reshape(-1, d))
+    return out
+
+
+def _expert_ffn_by_source(p: dict, recv: jax.Array, *, mlp_kind: str) -> jax.Array:
+    """recv: (ep_src, E_local, C, d) -> same shape; expert dim shared."""
+    ep, e_local, c, d = recv.shape
+    xin = recv.transpose(1, 0, 2, 3).reshape(e_local, ep * c, d)
+    y = _expert_ffn(p, xin, mlp_kind=mlp_kind)
+    return y.reshape(e_local, ep, c, d).transpose(1, 0, 2, 3)

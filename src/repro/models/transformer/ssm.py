@@ -1,0 +1,198 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in JAX.
+
+The chunked SSD form is the TPU-native adaptation: intra-chunk work is dense
+matmuls (MXU-friendly), inter-chunk work is a short `lax.scan` over chunk
+states — exactly the structure the Pallas kernel in ``repro.kernels.ssd``
+tiles into VMEM. ``ssd_reference`` is the O(S) sequential recurrence oracle
+used by tests.
+
+Recurrence (per head h, state dim N, head channels P):
+
+    H_t = exp(A·dt_t) · H_{t-1} + dt_t · B_t ⊗ x_t        H: (P, N)
+    y_t = C_t · H_t + D · x_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.transformer.common import normal_init, rms_norm
+
+
+# ------------------------------------------------------------------- SSD --
+
+
+def ssd_reference(x, dt, A, B, C, *, h0=None):
+    """Sequential oracle. x: (b,s,h,p), dt: (b,s,h), A: (h,), B/C: (b,s,n).
+    Returns (y (b,s,h,p), h_final (b,h,p,n))."""
+    from repro.core.vma import match_vma
+
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h0 = match_vma(h0, x, dt, A, B, C)
+
+    def step(hs, xs):
+        x_t, dt_t, b_t, c_t = xs
+        a_t = jnp.exp(A[None, :] * dt_t)  # (b,h)
+        upd = jnp.einsum("bhp,bn->bhpn", x_t * dt_t[..., None], b_t)
+        hs = a_t[..., None, None] * hs + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", hs, c_t)
+        return hs, y_t
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+    )
+    h_final, ys = lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (b,s,h,p)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, h0=None):
+    """Chunked SSD (the mamba2 paper's matmul formulation).
+    Shapes as ``ssd_reference``. Sequences are padded to a chunk multiple
+    internally (dt=0 pads are state-neutral: decay=1, update=0)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s_pad = s + pad
+    nc, q = s_pad // chunk, chunk
+
+    from repro.core.vma import match_vma
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, q, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, q, n)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h0 = match_vma(h0, x, dt, A, B, C)
+
+    loga = A[None, None, :] * dtf.reshape(b * nc, q, h).reshape(b, nc, q, h)  # (b,nc,q,h)
+    la = jnp.cumsum(loga, axis=2)  # cumulative within chunk
+
+    def chunk_body(h_prev, xs):
+        x_c, dt_c, b_c, c_c, la_c = xs  # (b,q,h,p),(b,q,h),(b,q,n),(b,q,n),(b,q,h)
+        xd = x_c * dt_c[..., None]  # (b,q,h,p)
+        # intra-chunk: Y[i] += Σ_{j<=i} (C_i·B_j) exp(la_i - la_j) xd[j]
+        cb = jnp.einsum("bin,bjn->bij", c_c, b_c)
+        decay = jnp.exp(la_c[:, :, None, :] - la_c[:, None, :, :])  # (b,i,j,h)
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        g = cb[..., None] * jnp.where(causal[None, :, :, None], decay, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", g, xd)
+        # inter-chunk: Y[i] += exp(la_i) C_i · h_prev
+        y_inter = jnp.einsum("bin,bhpn->bihp", c_c, h_prev) * jnp.exp(la_c)[..., None]
+        # state update: h = exp(la_Q) h_prev + Σ_j exp(la_Q - la_j) B_j ⊗ xd_j
+        last = la_c[:, -1:, :]  # (b,1,h)
+        dstate = jnp.exp(last - la_c)  # (b,q,h)
+        h_new = jnp.exp(last[:, 0])[..., None, None] * h_prev + jnp.einsum(
+            "bjn,bjhp->bhpn", b_c, xd * dstate[..., None]
+        )
+        return h_new, y_intra + y_inter
+
+    xs = tuple(
+        jnp.moveaxis(a, 1, 0)
+        for a in (xf, dtf, Bf, Cf, la)
+    )
+    h_final, ys = lax.scan(chunk_body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_pad, h, p)[:, :s]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(h_state, x, dt, A, B, C):
+    """One-token state update. h_state: (b,h,p,n); x: (b,h,p); dt: (b,h);
+    B/C: (b,n). Returns (y (b,h,p), h_new)."""
+    a_t = jnp.exp(A[None, :] * dt.astype(jnp.float32))
+    upd = jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32) * dt[..., None], B.astype(jnp.float32))
+    h_new = a_t[..., None, None] * h_state + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C.astype(jnp.float32))
+    return y.astype(x.dtype), h_new
+
+
+# ----------------------------------------------------------- mamba2 block --
+
+
+def mamba2_init(key: jax.Array, d: int, *, expand: int, head_dim: int, n_state: int, conv_width: int, dtype=jnp.bfloat16) -> dict:
+    d_in = expand * d
+    h = d_in // head_dim
+    conv_dim = d_in + 2 * n_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": normal_init(ks[0], (d, 2 * d_in + 2 * n_state + h), dtype=dtype),
+        "conv_w": normal_init(ks[1], (conv_width, conv_dim), scale=0.2, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "dt_bias": jnp.full((h,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "D": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.zeros((d_in,), dtype),
+        "out_proj": normal_init(ks[2], (d_in, d), dtype=dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array, *, state: jax.Array | None = None):
+    """Depthwise causal conv. xbc: (bt, s, c); w: (width, c).
+    ``state``: (bt, width-1, c) left context for decode; returns new state."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[-1]), xbc.dtype)
+    full = jnp.concatenate([state, xbc], axis=1)
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(width):
+        out = out + full[:, i : i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_state = full[:, full.shape[1] - (width - 1) :]
+    return jax.nn.silu(out).astype(xbc.dtype), new_state
+
+
+def mamba2_apply(
+    p: dict,
+    x: jax.Array,  # (bt, s, d)
+    *,
+    expand: int,
+    head_dim: int,
+    n_state: int,
+    chunk: int,
+    ssm_state: jax.Array | None = None,  # (bt, h, p, n) decode carry
+    conv_state: jax.Array | None = None,  # (bt, width-1, conv_dim)
+    decode: bool = False,
+):
+    """Mamba2 block body (no outer residual/norm — the block wrapper owns
+    those). Returns (y, (ssm_state, conv_state)) — states updated when
+    decoding, None-safe otherwise."""
+    bt, s, d = x.shape
+    d_in = expand * d
+    h = d_in // head_dim
+
+    proj = x @ p["in_proj"]  # (bt, s, 2*d_in + 2n + h)
+    z, xbc, dt_raw = jnp.split(proj, [d_in, 2 * d_in + 2 * n_state], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], state=conv_state)
+    x_ssm, B, C = jnp.split(xbc, [d_in, d_in + n_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (bt,s,h)
+    A = -jnp.exp(p["A_log"])
+
+    xh = x_ssm.reshape(bt, s, h, head_dim)
+    if decode:
+        assert s == 1
+        y1, new_ssm = ssd_decode_step(
+            ssm_state, xh[:, 0], dt[:, 0], A, B[:, 0], C[:, 0]
+        )
+        y = y1[:, None]
+    else:
+        y, new_ssm = ssd_chunked(xh, dt, A, B, C, h0=ssm_state, chunk=chunk)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(bt, s, d_in)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["out_proj"]
+    return out, (new_ssm, new_conv)

@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run reports.
+
+    PYTHONPATH=src python -m repro.roofline.render [--dir reports/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(reports_dir: str):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(reports_dir, "*.json"))):
+        rows.append(json.load(open(fn)))
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(rows, mesh):
+    out = [
+        "| arch | shape | µbatch | peak GiB/dev | HLO GFLOPs/dev | collective GiB/dev (top op) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        coll = r["collective_bytes"]
+        top = max((k for k in coll if k != "total"), key=lambda k: coll[k], default="-")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['num_micro']} | "
+            f"{r['memory']['peak_estimate_gib']} | "
+            f"{r['walk']['flops']/1e9:.0f} | "
+            f"{fmt_bytes(coll['total'])} ({top}) |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | useful-FLOPs ratio |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.4f} | "
+            f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+            f"{rf['dominant'].replace('_s','')} | {rf['useful_flops_ratio']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="reports/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print("## §Dry-run — single pod 16×16 (256 chips)\n")
+    print(dryrun_table(rows, "16x16"))
+    print("\n## §Dry-run — multi-pod 2×16×16 (512 chips)\n")
+    print(dryrun_table(rows, "2x16x16"))
+    print("\n## §Roofline — single pod\n")
+    print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Single-device training loop for the GNN experiments (paper Tables 1–2).
+
+The pipelined multi-device loops live in ``repro.core.pipeline``; this module
+is the "single CPU / single GPU" rows of the paper's benchmarks and the
+correctness oracle against which the pipeline must agree.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.data import GraphBatch
+from repro.models.gnn.net import GNNModel
+from repro.train import optimizer as opt_lib
+from repro.train.losses import masked_accuracy, masked_nll
+
+
+@dataclass
+class TrainResult:
+    params: Any
+    epoch_times_s: list[float] = field(default_factory=list)
+    train_loss: float = 0.0
+    train_acc: float = 0.0
+    val_acc: float = 0.0
+    test_acc: float = 0.0
+
+    @property
+    def first_epoch_s(self) -> float:
+        return self.epoch_times_s[0] if self.epoch_times_s else 0.0
+
+    @property
+    def rest_epochs_s(self) -> float:
+        return sum(self.epoch_times_s[1:])
+
+    @property
+    def avg_epoch_s(self) -> float:
+        rest = self.epoch_times_s[1:] or self.epoch_times_s
+        return sum(rest) / max(len(rest), 1)
+
+
+def make_train_step(model: GNNModel, optimizer: opt_lib.Optimizer):
+    def loss_fn(params, g: GraphBatch, rng):
+        logp = model.apply(params, g, rng=rng, train=True)
+        return masked_nll(logp, g.labels, g.train_mask)
+
+    @jax.jit
+    def step(params, opt_state, g: GraphBatch, rng):
+        loss, grads = jax.value_and_grad(loss_fn)(params, g, rng)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return step
+
+
+def make_eval(model: GNNModel):
+    @jax.jit
+    def evaluate(params, g: GraphBatch):
+        logp = model.apply(params, g, train=False)
+        return {
+            "train_loss": masked_nll(logp, g.labels, g.train_mask),
+            "train_acc": masked_accuracy(logp, g.labels, g.train_mask),
+            "val_acc": masked_accuracy(logp, g.labels, g.val_mask),
+            "test_acc": masked_accuracy(logp, g.labels, g.test_mask),
+        }
+
+    return evaluate
+
+
+def train(
+    model: GNNModel,
+    g: GraphBatch,
+    *,
+    epochs: int = 300,
+    lr: float = 5e-3,
+    weight_decay: float = 5e-4,
+    seed: int = 0,
+    log_every: int = 0,
+    time_epochs: bool = True,
+) -> TrainResult:
+    """Full-batch training, paper §7 protocol (300 epochs, fixed model)."""
+    key = jax.random.PRNGKey(seed)
+    key, init_key = jax.random.split(key)
+    params = model.init_params(init_key)
+    optimizer = opt_lib.adam(lr, weight_decay=weight_decay)
+    opt_state = optimizer.init(params)
+    step = make_train_step(model, optimizer)
+    evaluate = make_eval(model)
+
+    result = TrainResult(params=params)
+    for epoch in range(epochs):
+        key, rng = jax.random.split(key)
+        t0 = time.perf_counter()
+        params, opt_state, loss = step(params, opt_state, g, rng)
+        if time_epochs:
+            jax.block_until_ready(loss)
+            result.epoch_times_s.append(time.perf_counter() - t0)
+        if log_every and (epoch % log_every == 0 or epoch == epochs - 1):
+            m = evaluate(params, g)
+            print(
+                f"epoch {epoch:4d} loss {float(loss):.4f} "
+                f"train {float(m['train_acc']):.3f} val {float(m['val_acc']):.3f}"
+            )
+
+    metrics = evaluate(params, g)
+    result.params = params
+    result.train_loss = float(metrics["train_loss"])
+    result.train_acc = float(metrics["train_acc"])
+    result.val_acc = float(metrics["val_acc"])
+    result.test_acc = float(metrics["test_acc"])
+    return result

@@ -1,0 +1,32 @@
+"""Loss functions: masked node classification + microbatched LM xent."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_nll(log_probs: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
+    """Negative log-likelihood over masked nodes (model emits log-softmax,
+    matching the paper's final layer)."""
+    nll = -jnp.take_along_axis(log_probs, labels[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(mask.sum(), 1)
+    return jnp.sum(nll * mask) / denom
+
+
+def masked_accuracy(log_probs: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
+    pred = jnp.argmax(log_probs, axis=-1)
+    denom = jnp.maximum(mask.sum(), 1)
+    return jnp.sum((pred == labels) * mask) / denom
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, *, mask: jax.Array | None = None) -> jax.Array:
+    """Token-level cross entropy, numerically stable, f32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        denom = jnp.maximum(mask.sum(), 1.0)
+        return jnp.sum(nll * mask) / denom
+    return jnp.mean(nll)

@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS here by design — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py forces 512 placeholders
+# (subprocess-based tests set their own flag).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,90 @@
+"""Config registry: all assigned archs present with exact hyper-parameters."""
+
+import pytest
+
+from repro.configs import SHAPES, get_arch, get_shape, list_archs
+from repro.configs.base import pipeline_padding
+
+ASSIGNED = {
+    "codeqwen1.5-7b": dict(num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+                           d_ff=13440, vocab_size=92416),
+    "qwen2.5-32b": dict(num_layers=64, d_model=5120, num_heads=40, num_kv_heads=8,
+                        d_ff=27648, vocab_size=152064),
+    "qwen2-vl-2b": dict(num_layers=28, d_model=1536, num_heads=12, num_kv_heads=2,
+                        d_ff=8960, vocab_size=151936),
+    "gemma2-27b": dict(num_layers=46, d_model=4608, num_heads=32, num_kv_heads=16,
+                       d_ff=36864, vocab_size=256000),
+    "glm4-9b": dict(num_layers=40, d_model=4096, num_heads=32, num_kv_heads=2,
+                    d_ff=13696, vocab_size=151552),
+    "zamba2-7b": dict(num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+                      d_ff=14336, vocab_size=32000, ssm_state=64),
+    "deepseek-v3-671b": dict(num_layers=61, d_model=7168, num_heads=128,
+                             d_ff=2048, vocab_size=129280, num_experts=256,
+                             experts_per_token=8),
+    "arctic-480b": dict(num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+                        d_ff=4864, vocab_size=32000, num_experts=128,
+                        experts_per_token=2),
+    "musicgen-large": dict(num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32,
+                           d_ff=8192, vocab_size=2048),
+    "mamba2-130m": dict(num_layers=24, d_model=768, vocab_size=50280, ssm_state=128),
+}
+
+
+def test_all_ten_archs_registered():
+    assert set(list_archs()) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("name,fields", ASSIGNED.items())
+def test_exact_assigned_hyperparameters(name, fields):
+    cfg = get_arch(name)
+    for k, v in fields.items():
+        assert getattr(cfg, k) == v, (name, k, getattr(cfg, k), v)
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_smoke_variant_constraints(name):
+    cfg = get_arch(name, smoke=True)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    assert cfg.arch_type == get_arch(name).arch_type
+
+
+def test_shapes_table():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert get_shape("train_4k").global_batch == 256
+    assert get_shape("prefill_32k").seq_len == 32768
+    assert get_shape("decode_32k").kind == "decode"
+    assert get_shape("long_500k").seq_len == 524288
+    assert get_shape("long_500k").global_batch == 1
+
+
+def test_arch_type_coverage():
+    kinds = {get_arch(a).arch_type for a in list_archs()}
+    assert kinds == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+
+
+def test_gemma2_alternation_and_softcaps():
+    cfg = get_arch("gemma2-27b")
+    wins = cfg.layer_windows()
+    assert wins[0] == 4096 and wins[1] == 0  # local, global, local, ...
+    assert cfg.attn_softcap == 50.0 and cfg.logit_softcap == 30.0
+
+
+def test_long_context_fallback_windows():
+    cfg = get_arch("codeqwen1.5-7b")
+    assert all(w == 0 for w in cfg.layer_windows())
+    assert all(w == cfg.long_context_window for w in cfg.layer_windows(long_context=True))
+
+
+def test_zamba2_hybrid_pattern():
+    cfg = get_arch("zamba2-7b")
+    kinds = cfg.layer_kinds()
+    assert kinds[5] == "attn" and kinds[0] == "mamba"
+    assert kinds.count("attn") == len([i for i in range(81) if i % 6 == 5])
+
+
+def test_pipeline_padding_math():
+    assert pipeline_padding(61, 16) == (4, 3)
+    assert pipeline_padding(32, 16) == (2, 0)
+    assert pipeline_padding(81, 16) == (6, 15)

@@ -1,0 +1,161 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.gat_edge.kernel import gat_aggregate_kernel
+from repro.kernels.gat_edge.ref import gat_aggregate_ref
+from repro.kernels.gat_edge.ops import gat_aggregate, _ref_call
+from repro.kernels.spmm.kernel import padded_spmm_kernel
+from repro.kernels.spmm.ref import padded_spmm_ref
+from repro.kernels.spmm.ops import padded_spmm
+from repro.kernels.ssd.ops import ssd
+from repro.models.transformer.ssm import ssd_chunked, ssd_reference
+
+
+def _tol(dtype):
+    return 5e-2 if dtype == jnp.bfloat16 else 1e-4
+
+
+# ------------------------------------------------------------- GAT edge --
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,h,f", [(64, 4, 2, 8), (300, 9, 8, 8), (130, 16, 4, 16)])
+def test_gat_kernel_shapes(n, d, h, f, dtype):
+    k = jax.random.PRNGKey(n + d)
+    nbr_hw = jax.random.normal(k, (h, n, d, f), dtype)
+    s_self = jax.random.normal(jax.random.PRNGKey(1), (h, n), dtype)
+    s_nbr = jax.random.normal(jax.random.PRNGKey(2), (h, n, d), dtype)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(3), 0.7, (n, d)).at[:, 0].set(True)
+    out_k = gat_aggregate_kernel(nbr_hw, s_self, s_nbr, mask)
+    out_r = gat_aggregate_ref(nbr_hw, s_self, s_nbr, mask)
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32), atol=_tol(dtype)
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 200),
+    d=st.integers(1, 12),
+    h=st.integers(1, 4),
+    f=st.integers(1, 16),
+    seed=st.integers(0, 99),
+)
+def test_gat_kernel_hypothesis(n, d, h, f, seed):
+    k = jax.random.PRNGKey(seed)
+    nbr_hw = jax.random.normal(k, (h, n, d, f))
+    s_self = jax.random.normal(jax.random.fold_in(k, 1), (h, n))
+    s_nbr = jax.random.normal(jax.random.fold_in(k, 2), (h, n, d))
+    mask = jax.random.bernoulli(jax.random.fold_in(k, 3), 0.6, (n, d)).at[:, 0].set(True)
+    out_k = gat_aggregate_kernel(nbr_hw, s_self, s_nbr, mask, block_n=64)
+    out_r = gat_aggregate_ref(nbr_hw, s_self, s_nbr, mask)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-4)
+
+
+def test_gat_op_gradients():
+    N, D, H, F = 70, 5, 3, 8
+    hw = jax.random.normal(jax.random.PRNGKey(0), (N, H, F))
+    s_src = jax.random.normal(jax.random.PRNGKey(1), (N, H))
+    s_dst = jax.random.normal(jax.random.PRNGKey(2), (N, H))
+    nbr = jax.random.randint(jax.random.PRNGKey(3), (N, D), 0, N)
+    mask = jnp.ones((N, D), bool)
+    args = (hw, s_src, s_dst)
+    g_k = jax.grad(lambda *a: jnp.sum(gat_aggregate(*a, nbr, mask) ** 2), argnums=(0, 1, 2))(*args)
+    g_r = jax.grad(lambda *a: jnp.sum(_ref_call(*a, nbr, mask, 0.2) ** 2), argnums=(0, 1, 2))(*args)
+    for a, b in zip(g_k, g_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ----------------------------------------------------------------- SpMM --
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,f", [(100, 7, 32), (512, 16, 64), (33, 3, 8)])
+def test_spmm_kernel_shapes(n, d, f, dtype):
+    hw = jax.random.normal(jax.random.PRNGKey(0), (n, f), dtype)
+    nbr = jax.random.randint(jax.random.PRNGKey(1), (n, d), 0, n)
+    norm = (jax.random.uniform(jax.random.PRNGKey(2), (n, d)) * 0.5).astype(dtype)
+    out_k = padded_spmm_kernel(hw, nbr, norm, block_n=128)
+    out_r = padded_spmm_ref(hw, nbr, norm)
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        atol=_tol(dtype) * d,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 300), d=st.integers(1, 10), f=st.integers(1, 32), seed=st.integers(0, 99))
+def test_spmm_hypothesis(n, d, f, seed):
+    k = jax.random.PRNGKey(seed)
+    hw = jax.random.normal(k, (n, f))
+    nbr = jax.random.randint(jax.random.fold_in(k, 1), (n, d), 0, n)
+    norm = jax.random.uniform(jax.random.fold_in(k, 2), (n, d))
+    out_k = padded_spmm_kernel(hw, nbr, norm, block_n=64)
+    out_r = padded_spmm_ref(hw, nbr, norm)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-4)
+
+
+def test_spmm_grad():
+    n, d, f = 64, 5, 16
+    hw = jax.random.normal(jax.random.PRNGKey(0), (n, f))
+    nbr = jax.random.randint(jax.random.PRNGKey(1), (n, d), 0, n)
+    norm = jax.random.uniform(jax.random.PRNGKey(2), (n, d))
+    g1 = jax.grad(lambda a: jnp.sum(padded_spmm(a, nbr, norm) ** 2))(hw)
+    g2 = jax.grad(lambda a: jnp.sum(padded_spmm_ref(a, nbr, norm) ** 2))(hw)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+# ------------------------------------------------------------------ SSD --
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (256, 64), (128, 128)])
+def test_ssd_kernel_vs_sequential(s, chunk):
+    b, h, p, n = 2, 3, 8, 16
+    k = jax.random.PRNGKey(s)
+    x = jax.random.normal(k, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (b, s, h))) * 0.1
+    A = -jnp.exp(jnp.linspace(0.0, 2.0, h))
+    B = jax.random.normal(jax.random.fold_in(k, 2), (b, s, n)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(k, 3), (b, s, n)) * 0.3
+    y_k = ssd(x, dt, A, B, C, chunk)
+    y_r, _ = ssd_reference(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-4)
+
+
+def test_ssd_grad_matches_chunked():
+    b, s, h, p, n = 1, 64, 2, 4, 8
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (b, s, h))) * 0.1
+    A = -jnp.exp(jnp.linspace(0.0, 1.0, h))
+    B = jax.random.normal(jax.random.fold_in(k, 2), (b, s, n)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(k, 3), (b, s, n)) * 0.3
+    g1 = jax.grad(lambda a: jnp.sum(ssd(a, dt, A, B, C, 16) ** 2))(x)
+    g2 = jax.grad(lambda a: jnp.sum(ssd_chunked(a, dt, A, B, C, chunk=16)[0] ** 2))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s_chunks=st.sampled_from([(32, 8), (64, 32), (96, 32)]),
+    p=st.sampled_from([4, 8]),
+    n=st.sampled_from([8, 16]),
+    seed=st.integers(0, 50),
+)
+def test_ssd_hypothesis(s_chunks, p, n, seed):
+    s, chunk = s_chunks
+    b, h = 1, 2
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(k, 1), (b, s, h))) * 0.1
+    A = -jnp.exp(jax.random.uniform(jax.random.fold_in(k, 4), (h,)) * 2)
+    B = jax.random.normal(jax.random.fold_in(k, 2), (b, s, n)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(k, 3), (b, s, n)) * 0.3
+    y_k = ssd(x, dt, A, B, C, chunk)
+    y_r, _ = ssd_reference(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=2e-4)

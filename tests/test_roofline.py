@@ -1,0 +1,101 @@
+"""Roofline machinery: loop-aware HLO walker + report math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import HW, model_flops, roofline_report
+from repro.roofline.hlo_walk import analyze_hlo, parse_module
+from repro.configs import get_arch, get_shape
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_walker_counts_plain_dot():
+    m, k, n = 64, 32, 16
+    txt = _compile_text(
+        lambda a, b: a @ b,
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    )
+    r = analyze_hlo(txt)
+    assert r["flops"] == pytest.approx(2 * m * k * n, rel=0.01)
+
+
+def test_walker_multiplies_scan_trip_count():
+    m = 32
+
+    def f(a, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, a, None, length=10)
+        return out
+
+    txt = _compile_text(
+        f,
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+    )
+    r = analyze_hlo(txt)
+    # ten matmuls, not one
+    assert r["flops"] == pytest.approx(10 * 2 * m * m * m, rel=0.05)
+
+
+def test_walker_nested_scans():
+    m = 16
+
+    def f(a, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        out, _ = jax.lax.scan(outer, a, None, length=4)
+        return out
+
+    txt = _compile_text(
+        f,
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+        jax.ShapeDtypeStruct((m, m), jnp.float32),
+    )
+    r = analyze_hlo(txt)
+    assert r["flops"] == pytest.approx(12 * 2 * m ** 3, rel=0.05)
+
+
+def test_parse_module_finds_computations():
+    txt = _compile_text(lambda a: jnp.sum(a * a), jax.ShapeDtypeStruct((8, 8), jnp.float32))
+    comps = parse_module(txt)
+    assert len(comps) >= 1
+
+
+def test_roofline_report_terms():
+    rep = roofline_report(
+        device_flops=197e12,  # exactly one second of compute
+        device_bytes=819e9,  # exactly one second of HBM
+        device_collective={"total": 0, "all-gather": 0},
+        chips=256,
+        model_flops_global=197e12 * 256 * 0.5,
+    )
+    assert rep["compute_s"] == pytest.approx(1.0)
+    assert rep["memory_s"] == pytest.approx(1.0)
+    assert rep["collective_s"] == 0.0
+    assert rep["useful_flops_ratio"] == pytest.approx(0.5)
+    assert rep["dominant"] in ("compute_s", "memory_s")
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_arch("codeqwen1.5-7b")
+    tr = model_flops(cfg, get_shape("train_4k"), training=True)
+    de = model_flops(cfg, get_shape("decode_32k"), training=False)
+    # train: 6·N·(256·4096) ; decode: 2·N·128
+    assert tr / de == pytest.approx(3 * 256 * 4096 / 128, rel=0.01)
+
+
+def test_moe_active_params_used():
+    cfg = get_arch("deepseek-v3-671b")
+    assert cfg.active_param_count() < 0.1 * cfg.param_count()
+    mf = model_flops(cfg, get_shape("train_4k"), training=True)
+    assert mf == pytest.approx(6 * cfg.active_param_count() * 256 * 4096, rel=1e-6)

@@ -1,0 +1,197 @@
+"""SPMD pipeline correctness on a multi-device (forced host) mesh.
+
+These run in subprocesses so the 8-device XLA flag never leaks into the
+main test process (smoke tests must see 1 device)."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(src: str, devices: int = 8, timeout: int = 1200):
+    env = {
+        "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+        "PYTHONPATH": "src",
+        "PATH": "/usr/bin:/bin",
+        "HOME": "/root",
+    }
+    import os
+
+    env["PATH"] = os.environ.get("PATH", env["PATH"])
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(src)],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env={**os.environ, **env},
+        cwd="/root/repo",
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_pipeline_fwd_grad_equivalence():
+    out = _run("""
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.spmd_pipe import spmd_pipeline, make_scanned_stage, make_gather_fn
+
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    D, S, PER, NM, B = 16, 4, 2, 4, 8
+    w = jax.random.normal(jax.random.PRNGKey(0), (S, PER, D, D)) * 0.3
+    extras = {'active': jnp.ones((S, PER))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (NM, B // NM, D))
+
+    def block_fn(lp, ex, h):
+        return jnp.where(ex['active'] > 0, jnp.tanh(h @ lp['w']), h)
+
+    def pipe(wp, ex, xm):
+        gfn = make_gather_fn({'w': True}, 'data')
+        stage_fn = make_scanned_stage(
+            block_fn,
+            jax.tree_util.tree_map(lambda a: a[0], wp),
+            jax.tree_util.tree_map(lambda a: a[0], ex),
+            gather_fn=gfn)
+        out, _ = spmd_pipeline(stage_fn, xm, stage_axis='model', num_stages=S,
+                               remat=True, vma_refs=(wp,))
+        return out
+
+    f = jax.jit(jax.shard_map(pipe, mesh=mesh,
+        in_specs=({'w': P('model', None, 'data', None)}, {'active': P('model', None)},
+                  P(None, 'data', None)),
+        out_specs=P(None, 'data', None)))
+    out = f({'w': w}, extras, x)
+    ref = x
+    for s in range(S):
+        for i in range(PER):
+            ref = jnp.tanh(ref @ w[s, i])
+    assert jnp.allclose(out, ref, atol=1e-5), float(jnp.max(jnp.abs(out - ref)))
+
+    g1 = jax.grad(lambda wd: jnp.sum(f(wd, extras, x) ** 2) / 2)({'w': w})
+    def loss_ref(wd):
+        h = x
+        for s in range(S):
+            for i in range(PER):
+                h = jnp.tanh(h @ wd['w'][s, i])
+        return jnp.sum(h ** 2) / 2
+    g2 = jax.grad(loss_ref)({'w': w})
+    assert jnp.allclose(g1['w'], g2['w'], atol=1e-4), float(jnp.max(jnp.abs(g1['w'] - g2['w'])))
+    print('EQUIV_OK')
+    """)
+    assert "EQUIV_OK" in out
+
+
+@pytest.mark.slow
+def test_pipeline_scatter_dim_equivalence():
+    out = _run("""
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.spmd_pipe import spmd_pipeline, make_scanned_stage
+
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    D, S, PER, NM, B, SEQ = 8, 4, 1, 2, 4, 8
+    w = jax.random.normal(jax.random.PRNGKey(0), (S, PER, D, D)) * 0.3
+    ex = {'active': jnp.ones((S, PER))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (NM, B // NM, SEQ, D))
+
+    def block_fn(lp, exx, h):
+        return jnp.tanh(h @ lp['w'])
+
+    def pipe(wp, exx, xm):
+        stage_fn = make_scanned_stage(block_fn,
+            jax.tree_util.tree_map(lambda a: a[0], wp),
+            jax.tree_util.tree_map(lambda a: a[0], exx))
+        out, _ = spmd_pipeline(stage_fn, xm, stage_axis='model', num_stages=S,
+                               scatter_dim=2, vma_refs=(wp,))
+        return out
+
+    f = jax.jit(jax.shard_map(pipe, mesh=mesh,
+        in_specs=({'w': P('model', None, None, None)}, {'active': P('model', None)},
+                  P(None, 'data', None, None)),
+        out_specs=P(None, 'data', 'model', None)))
+    out = f({'w': w}, ex, x)   # (NM, mb, SEQ, D) with SEQ sharded over model
+    ref = x
+    for s in range(S):
+        ref = jnp.tanh(ref @ w[s, 0])
+    assert out.shape == ref.shape
+    assert jnp.allclose(out, ref, atol=1e-5), float(jnp.max(jnp.abs(out - ref)))
+    print('SCATTER_OK')
+    """)
+    assert "SCATTER_OK" in out
+
+
+@pytest.mark.slow
+def test_stateful_pipeline_cache_writes():
+    out = _run("""
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.spmd_pipe import spmd_pipeline, make_scanned_stage_stateful
+
+    mesh = jax.make_mesh((4,), ('model',))
+    D, S, PER, NM, B = 8, 4, 1, 4, 4
+    w = jax.random.normal(jax.random.PRNGKey(0), (S, PER, D, D)) * 0.3
+    ex = {'active': jnp.ones((S, PER))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (NM, B // NM, D))
+    state = jnp.zeros((S, NM, PER, B // NM, D))  # per-layer cache of inputs
+
+    def block_fn(lp, exx, h, cache_i):
+        return jnp.tanh(h @ lp['w']), h  # cache the INPUT seen by each layer
+
+    def pipe(wp, exx, xm, st):
+        stage_fn = make_scanned_stage_stateful(block_fn,
+            jax.tree_util.tree_map(lambda a: a[0], wp),
+            jax.tree_util.tree_map(lambda a: a[0], exx))
+        out, st2 = spmd_pipeline(stage_fn, xm, stage_axis='model', num_stages=S,
+                                 state=st[0], vma_refs=(wp,))
+        return out, st2[None]
+
+    f = jax.jit(jax.shard_map(pipe, mesh=mesh,
+        in_specs=({'w': P('model', None, None, None)}, {'active': P('model', None)},
+                  P(None, None, None), P('model', None, None, None, None)),
+        out_specs=(P(None, None, None), P('model', None, None, None, None))))
+    out, st2 = f({'w': w}, ex, x, state)
+    # stage 0's cached input for microbatch m must equal x[m]
+    st0 = st2[0]   # (NM, PER, mb, D)
+    assert jnp.allclose(st0[:, 0], x, atol=1e-6)
+    # stage 1's cached input must equal tanh(x @ w0)
+    st1 = st2[1]
+    assert jnp.allclose(st1[:, 0], jnp.tanh(x @ w[0, 0]), atol=1e-5)
+    print('STATE_OK')
+    """)
+    assert "STATE_OK" in out
+
+
+@pytest.mark.slow
+def test_multidevice_train_smoke_all_paths():
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_arch, ShapeConfig
+    from repro.models.transformer.model import Topology, init_params, make_train_step
+    from repro.data.tokens import token_batch
+
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    shape = ShapeConfig('smoke', 64, 8, 'train')
+    for name in ['qwen2.5-32b', 'arctic-480b', 'musicgen-large', 'glm4-9b']:
+        cfg = get_arch(name, smoke=True)
+        topo = Topology(num_stages=4, fsdp_size=2, num_micro=2, loss_chunks=2)
+        art = make_train_step(cfg, topo, shape, mesh, dtype=jnp.float32)
+        params = jax.device_put(
+            init_params(cfg, jax.random.PRNGKey(0), num_stages=4, dtype=jnp.float32),
+            art.in_shardings[0])
+        opt_state = art.meta['optimizer'].init(params)
+        s_front = int(shape.seq_len * cfg.frontend_frac) if cfg.frontend != 'none' else 0
+        batch = {'tokens': jnp.asarray(token_batch(batch=8, seq=shape.seq_len - s_front,
+                                                   vocab=cfg.vocab_size))}
+        if s_front:
+            from repro.data.tokens import frontend_embeds
+            batch['frontend_embeds'] = jnp.asarray(frontend_embeds(
+                batch=8, seq=s_front, d_model=cfg.d_model))
+        _, _, m = jax.jit(art.fn, in_shardings=art.in_shardings,
+                          out_shardings=art.out_shardings)(params, opt_state, batch)
+        assert np.isfinite(float(m['loss'])), name
+    print('MD_SMOKE_OK')
+    """, timeout=2400)
+    assert "MD_SMOKE_OK" in out
