@@ -2,6 +2,11 @@
 
 The paper's slowdown comes from per-chunk sub-graph rebuilds; we report
 epoch time AND the isolated rebuild cost so the overhead source is explicit.
+
+Beyond-paper: every chunk count also runs under each pipeline schedule
+(fill-drain / 1F1B / interleaved where legal), emitting the schedule's
+bubble fraction and measured peak live activations next to the epoch time —
+the schedule-comparison columns for the ROADMAP's speed axis.
 """
 
 from __future__ import annotations
@@ -13,21 +18,31 @@ from repro.core.microbatch import make_plan
 from repro.graphs import load_dataset
 from repro.launch.train import run_gnn
 
+SCHEDULES = ("fill_drain", "1f1b", "interleaved")
 
-def run(*, dataset="cora", epochs=30, max_chunks=4):
+
+def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES):
     g = load_dataset(dataset)
     rows = []
+    stages, pipe_devices = 4, 2
     for chunks in range(1, max_chunks + 1):
         plan = make_plan(g, chunks, strategy="sequential")
-        args = types.SimpleNamespace(
-            mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
-            stages=4, chunks=chunks, epochs=epochs, seed=0, log_every=0,
-        )
-        r = run_gnn(args)
-        emit(
-            f"fig3/{dataset}/chunks{chunks}",
-            r["avg_epoch_s"] * 1e6,
-            f"rebuild_s={plan.rebuild_seconds:.3f};edge_cut={plan.edge_cut:.3f}",
-        )
-        rows.append((chunks, r["avg_epoch_s"], plan.rebuild_seconds))
+        for schedule in schedules:
+            args = types.SimpleNamespace(
+                mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
+                stages=stages, chunks=chunks, epochs=epochs, seed=0, log_every=0,
+                schedule=schedule, pipe_devices=pipe_devices,
+            )
+            try:
+                r = run_gnn(args)
+            except ValueError:
+                continue  # schedule rejects this (stages, chunks) combo
+            emit(
+                f"fig3/{dataset}/{schedule}_chunks{chunks}",
+                r["avg_epoch_s"] * 1e6,
+                f"rebuild_s={plan.rebuild_seconds:.3f};edge_cut={plan.edge_cut:.3f};"
+                f"bubble={r['bubble_fraction']:.3f};"
+                f"peak_live={r['peak_live_activations']}",
+            )
+            rows.append((schedule, chunks, r["avg_epoch_s"], plan.rebuild_seconds))
     return rows

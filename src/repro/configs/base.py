@@ -176,7 +176,6 @@ class ArchConfig:
     def _attn_params(self) -> int:
         d = self.d_model
         if self.attn_kind == "mla":
-            r_q = self.q_lora_rank or (self.num_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim))
             qk = self.qk_nope_head_dim + self.qk_rope_head_dim
             n = 0
             if self.q_lora_rank:

@@ -2,7 +2,15 @@
 # GNNs (and, generalized, for the assigned transformer pool).
 from repro.core.microbatch import MicroBatch, MicroBatchPlan, make_plan, STRATEGIES
 from repro.core.pipeline import GPipe, GPipeConfig
-from repro.core.schedule import fill_drain_timeline, bubble_fraction
+from repro.core.schedule import (
+    SCHEDULES,
+    Schedule,
+    WorkItem,
+    bubble_fraction,
+    fill_drain_timeline,
+    get_schedule,
+    validate_timeline,
+)
 
 __all__ = [
     "MicroBatch",
@@ -11,6 +19,11 @@ __all__ = [
     "STRATEGIES",
     "GPipe",
     "GPipeConfig",
+    "SCHEDULES",
+    "Schedule",
+    "WorkItem",
+    "get_schedule",
+    "validate_timeline",
     "fill_drain_timeline",
     "bubble_fraction",
 ]

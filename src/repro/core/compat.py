@@ -1,0 +1,26 @@
+"""JAX version compatibility.
+
+The codebase targets the modern ``jax.shard_map`` API (jax >= 0.6, with vma
+tracking from 0.8); older CPU wheels only ship
+``jax.experimental.shard_map.shard_map`` whose replication checker predates
+vma (``check_rep``) and rejects valid scan/ppermute pipelines. ``shard_map``
+here resolves to the native API when present and otherwise falls back to the
+experimental one with rep-checking off, so the compiled pipelines run
+unchanged on both."""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

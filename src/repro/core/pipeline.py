@@ -7,12 +7,17 @@ Faithful semantics:
   * the input is micro-batched into ``chunks`` (strategy pluggable — the
     paper's index-sequential split is the default and reproduces its
     accuracy collapse);
-  * forward runs the synchronous fill-drain schedule; backward re-computes
-    each stage's internals from its saved input (GPipe's activation
-    re-materialization) and accumulates gradients across micro-batches;
-  * a single synchronous optimizer update closes the step, so the number of
-    chunks never changes the *intended* gradient — only lossy micro-batching
-    of the graph does (measured by ``plan.edge_cut``).
+  * work executes in the order a pluggable ``Schedule`` timeline dictates —
+    fill-drain (GPipe, the paper), 1F1B, or interleaved 1F1B over virtual
+    stages (``repro.core.schedule``); backward re-computes each stage's
+    internals from its saved input (GPipe's activation re-materialization)
+    and accumulates gradients across micro-batches;
+  * a single synchronous optimizer update closes the step, so neither the
+    number of chunks nor the schedule ever changes the *intended* gradient —
+    per-chunk gradients are reduced in a canonical order, making every
+    schedule's update bit-identical to the fill-drain baseline. Only lossy
+    micro-batching of the graph moves the numbers (measured by
+    ``plan.edge_cut``).
 
 The schedule is driven at Python level with per-stage jitted kernels (and
 optional per-stage device placement), mirroring torchgpipe's host-driven
@@ -24,13 +29,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.microbatch import MicroBatch, MicroBatchPlan
-from repro.core.schedule import bubble_fraction
+from repro.core.microbatch import MicroBatchPlan
+from repro.core.schedule import get_schedule
 from repro.models.gnn.net import GNNModel
 from repro.train import optimizer as opt_lib
 
@@ -40,6 +45,8 @@ class GPipeConfig:
     balance: tuple[int, ...]  # layers per stage; sums to len(model.layers)
     chunks: int
     devices: tuple | None = None  # optional per-stage device placement
+    schedule: str = "fill_drain"  # "fill_drain" | "gpipe" | "1f1b" | "interleaved"
+    num_devices: int | None = None  # interleaved: physical devices (V = stages/devices)
 
     @property
     def num_stages(self) -> int:
@@ -56,6 +63,7 @@ class GPipe:
             )
         self.model = model
         self.config = config
+        self.schedule = get_schedule(config.schedule, num_devices=config.num_devices)
         self._bounds: list[tuple[int, int]] = []
         lo = 0
         for b in config.balance:
@@ -102,7 +110,8 @@ class GPipe:
         devs = self.config.devices
         if not devs:
             return tree
-        return jax.device_put(tree, devs[s % len(devs)])
+        phys = self.schedule.device_of(s, self.config.num_stages)
+        return jax.device_put(tree, devs[phys % len(devs)])
 
     # -------------------------------------------------------------- step --
 
@@ -125,41 +134,30 @@ class GPipe:
         chunk_key = jax.random.fold_in(rng, chunk)
         return jax.random.split(chunk_key, n_layers)
 
-    def forward_plan(
-        self, params: list, plan: MicroBatchPlan, rng: jax.Array, *, record=None
-    ) -> tuple[list[jax.Array], list[list[jax.Array]]]:
-        """Fill-drain forward over all chunks. Returns (final activations per
-        chunk, saved stage inputs [stage][chunk] for recompute-backward)."""
-        S, C = self.config.num_stages, plan.chunks
-        saved: list[list[Any]] = [[None] * C for _ in range(S)]
-        outs: list[Any] = [None] * C
-        # tick loop is explicit so work executes in true fill-drain order
-        for t in range(C + S - 1):
-            for s in range(S - 1, -1, -1):
-                c = t - s
-                if not (0 <= c < C):
-                    continue
-                mb = plan.batches[c]
-                h = mb.graph.features if s == 0 else saved[s][c]
-                t0 = time.perf_counter()
-                rngs = self._layer_rngs(rng, c)
-                lo, _ = self._bounds[s]
-                h_out = self._fwd_fns[s](
-                    self.stage_params(params, s),
-                    mb.graph,
-                    self._place(h, s),
-                    rngs[lo : lo + self.config.balance[s]],
-                )
-                if record is not None:
-                    jax.block_until_ready(h_out)
-                    record.append(("fwd", t, s, c, time.perf_counter() - t0))
-                if s == 0:
-                    saved[0][c] = mb.graph.features
-                if s + 1 < S:
-                    saved[s + 1][c] = h_out
-                else:
-                    outs[c] = h_out
-        return outs, saved
+    def _run_fwd_item(self, params, plan, rng, it, saved, outs, record):
+        """Execute one forward work item: consume the saved stage input,
+        produce (and route) the stage output."""
+        s, c = it.stage, it.chunk
+        mb = plan.batches[c]
+        h = mb.graph.features if s == 0 else saved[(s, c)]
+        t0 = time.perf_counter()
+        rngs = self._layer_rngs(rng, c)
+        lo, _ = self._bounds[s]
+        h_out = self._fwd_fns[s](
+            self.stage_params(params, s),
+            mb.graph,
+            self._place(h, s),
+            rngs[lo : lo + self.config.balance[s]],
+        )
+        if record is not None:
+            jax.block_until_ready(h_out)
+            record.append(("fwd", it.tick, s, c, time.perf_counter() - t0))
+        if s == 0:
+            saved[(0, c)] = mb.graph.features
+        if s + 1 < self.config.num_stages:
+            saved[(s + 1, c)] = h_out
+        else:
+            outs[c] = h_out
 
     def train_step(
         self,
@@ -170,47 +168,74 @@ class GPipe:
         optimizer: opt_lib.Optimizer,
         *,
         record: list | None = None,
+        stats: dict | None = None,
     ):
-        """One synchronous GPipe step: fill-drain fwd, recompute bwd with
-        gradient accumulation over chunks, one optimizer update."""
+        """One synchronous pipeline step under ``config.schedule``: the
+        timeline's work items execute in order (fwd saves its stage input,
+        bwd recomputes + frees it, accumulating per-chunk gradients), then
+        one optimizer update closes the step. Gradients are reduced in a
+        canonical chunk order so every schedule produces a bit-identical
+        update. ``stats`` (if given) receives measured peak live activations
+        and the schedule's bubble accounting."""
         S, C = self.config.num_stages, plan.chunks
-        outs, saved = self.forward_plan(params, plan, rng, record=record)
+        timeline = self.schedule.timeline(S, C)
 
+        saved: dict[tuple[int, int], Any] = {}
+        outs: dict[int, Any] = {}
+        cts: dict[int, Any] = {}
+        chunk_losses: list[Any] = [None] * C
+        chunk_grads: list[list[Any]] = [[None] * C for _ in range(S)]
+        peak_live = 0
+
+        for it in timeline:
+            if it.phase == "fwd":
+                self._run_fwd_item(params, plan, rng, it, saved, outs, record)
+                peak_live = max(peak_live, len(saved))
+                continue
+            s, c = it.stage, it.chunk
+            mb = plan.batches[c]
+            if s == S - 1:
+                # the chunk's loss cotangent, computed once its fwd completes
+                (loss_sum, count), d_h = self._loss_grad(
+                    outs.pop(c), mb.graph.labels, mb.graph.train_mask & mb.core_mask
+                )
+                chunk_losses[c] = (loss_sum, count)
+                cts[c] = d_h
+            rngs = self._layer_rngs(rng, c)
+            lo, hi = self._bounds[s]
+            t0 = time.perf_counter()
+            d_params, d_h = self._bwd_fns[s](
+                self.stage_params(params, s),
+                mb.graph,
+                saved.pop((s, c)),
+                rngs[lo:hi],
+                cts[c],
+            )
+            if record is not None:
+                jax.block_until_ready(d_h)
+                record.append(("bwd", it.tick, s, c, time.perf_counter() - t0))
+            cts[c] = d_h
+            chunk_grads[s][c] = d_params
+
+        # canonical reduction — per stage, chunks in descending order (the
+        # fill-drain drain order), so the accumulated floats are identical
+        # no matter which schedule produced the per-chunk gradients
         grads = [jax.tree_util.tree_map(jnp.zeros_like, p) for p in params]
-        cts: list[Any] = [None] * C
         total_loss = jnp.zeros((), jnp.float32)
         total_count = jnp.zeros((), jnp.float32)
-        for c, mb in enumerate(plan.batches):
-            (loss_sum, count), d_h = self._loss_grad(
-                outs[c], mb.graph.labels, mb.graph.train_mask & mb.core_mask
-            )
-            cts[c] = d_h
+        for s in range(S):
+            lo, _ = self._bounds[s]
+            for c in reversed(range(C)):
+                for i, g in enumerate(chunk_grads[s][c]):
+                    grads[lo + i] = jax.tree_util.tree_map(jnp.add, grads[lo + i], g)
+        for c in range(C):
+            loss_sum, count = chunk_losses[c]
             total_loss = total_loss + loss_sum
             total_count = total_count + count
 
-        # drain backward in reverse fill-drain order
-        for t in range(C + S - 1):
-            for s in range(S):
-                c = (C - 1) - (t - (S - 1 - s))
-                if not (0 <= c < C):
-                    continue
-                mb = plan.batches[c]
-                rngs = self._layer_rngs(rng, c)
-                lo, hi = self._bounds[s]
-                t0 = time.perf_counter()
-                d_params, d_h = self._bwd_fns[s](
-                    self.stage_params(params, s),
-                    mb.graph,
-                    saved[s][c],
-                    rngs[lo:hi],
-                    cts[c],
-                )
-                if record is not None:
-                    jax.block_until_ready(d_h)
-                    record.append(("bwd", t, s, c, time.perf_counter() - t0))
-                cts[c] = d_h
-                for i, g in enumerate(d_params):
-                    grads[lo + i] = jax.tree_util.tree_map(jnp.add, grads[lo + i], g)
+        if stats is not None:
+            stats.update(self.schedule.describe(S, C))
+            stats["measured_peak_live_activations"] = peak_live
 
         scale = 1.0 / jnp.maximum(total_count, 1.0)
         grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
@@ -222,13 +247,15 @@ class GPipe:
     # ------------------------------------------------------------ report --
 
     def describe(self) -> dict:
-        return {
-            "num_stages": self.config.num_stages,
-            "balance": list(self.config.balance),
-            "chunks": self.config.chunks,
-            "bubble_fraction": bubble_fraction(self.config.num_stages, self.config.chunks),
-            "layers": [l.name for l in self.model.layers],
-        }
+        d = self.schedule.describe(self.config.num_stages, self.config.chunks)
+        d.update(
+            {
+                "balance": list(self.config.balance),
+                "chunks": self.config.chunks,
+                "layers": [l.name for l in self.model.layers],
+            }
+        )
+        return d
 
 
 def _chunk_loss_sum(log_probs, labels, mask):

@@ -1,17 +1,42 @@
-"""GPipe fill-drain schedule model + bubble accounting.
+"""Pluggable pipeline schedules + bubble/memory accounting.
 
 The schedule is the paper's object of study: with S stages and C chunks the
 synchronous fill-drain pipeline runs C + S - 1 forward ticks and C + S - 1
 backward ticks; the idle ("bubble") fraction is (S - 1) / (C + S - 1).
+GNNPipe/GraphPipe show smarter schedules are the main lever for closing that
+gap, so the schedule is now an abstraction, not a single function:
 
-``fill_drain_timeline`` enumerates (tick, stage, chunk, phase) work items —
-used both by the Python-scheduled GNN engine (execution order) and by the
-benchmark harness (predicted-vs-measured epoch time, Fig 3 analogue).
+  * ``fill_drain``  — GPipe's synchronous schedule (the paper's §6 baseline).
+    All C forwards complete before any backward: peak live activations are
+    C per stage, bubble (S-1)/(C+S-1).
+  * ``1f1b``        — one-forward-one-backward (PipeDream-flush /
+    Megatron-LM's non-interleaved schedule). Same bubble as fill-drain for
+    equal fwd/bwd tick costs, but stage s holds at most min(S-s, C) live
+    activations — the memory lever.
+  * ``interleaved`` — interleaved 1F1B: each of D physical devices hosts
+    V = S/D *virtual* stages placed round-robin (stage k on device k mod D);
+    activations hop device→device circularly. The bubble shrinks by ~V:
+    (D-1)/(V·C+D-1) instead of (D-1)/(C+D-1).
+
+Every schedule emits a ``WorkItem`` timeline — (tick, stage, chunk, phase,
+device) — consumed generically by the host-driven GNN engine
+(``repro.core.pipeline``) and by the benchmark harness (predicted-vs-measured
+epoch time, Fig 3 analogue). ``validate_timeline`` checks the invariants any
+correct timeline must satisfy; the 1F1B/interleaved timelines come out of a
+greedy list scheduler whose dependency graph encodes both data flow and the
+1F1B in-flight activation window, so they are correct by construction.
+
+Module-level ``fill_drain_timeline`` / ``bubble_fraction`` /
+``predicted_step_time`` are kept as the fill-drain shorthand (the paper's
+formulas, used throughout the benchmarks).
 """
 
 from __future__ import annotations
 
+import abc
 import dataclasses
+
+# ----------------------------------------------------------------- items --
 
 
 @dataclasses.dataclass(frozen=True)
@@ -20,30 +45,451 @@ class WorkItem:
     stage: int
     chunk: int
     phase: str  # "fwd" | "bwd"
+    device: int = -1  # physical device; defaults to == stage (one stage/device)
+
+    def __post_init__(self):
+        if self.device < 0:
+            object.__setattr__(self, "device", self.stage)
+
+
+def _sort_key(it: WorkItem):
+    # canonical execution order: tick-major, forwards before backwards inside
+    # a tick (a tick's items are concurrent on real hardware; a host executor
+    # running them in this order never frees an activation before its save)
+    return (it.tick, 0 if it.phase == "fwd" else 1, it.stage, it.chunk)
+
+
+def validate_timeline(
+    items: list[WorkItem], num_stages: int, num_chunks: int
+) -> None:
+    """Raise AssertionError unless ``items`` is a correct pipeline timeline:
+
+    * each (stage, chunk, phase) appears exactly once (2·S·C items total);
+    * no device runs two items in the same tick;
+    * fwd(s, c) strictly after fwd(s-1, c);
+    * bwd(s, c) strictly after bwd(s+1, c), and after fwd(S-1, c) at the
+      last stage — so a chunk's bwd never precedes its fwd anywhere.
+    """
+    S, C = num_stages, num_chunks
+    seen: dict[tuple[int, int, str], int] = {}
+    for it in items:
+        key = (it.stage, it.chunk, it.phase)
+        assert key not in seen, f"duplicate work item {key}"
+        assert 0 <= it.stage < S and 0 <= it.chunk < C, it
+        assert it.phase in ("fwd", "bwd"), it
+        seen[key] = it.tick
+    assert len(seen) == 2 * S * C, f"expected {2 * S * C} items, got {len(seen)}"
+    busy = {(it.tick, it.device) for it in items}
+    assert len(busy) == len(items), "a device runs two items in one tick"
+    for c in range(C):
+        for s in range(1, S):
+            assert seen[(s, c, "fwd")] > seen[(s - 1, c, "fwd")], (s, c, "fwd dep")
+        assert seen[(S - 1, c, "bwd")] > seen[(S - 1, c, "fwd")], (c, "loss dep")
+        for s in range(S - 1):
+            assert seen[(s, c, "bwd")] > seen[(s + 1, c, "bwd")], (s, c, "bwd dep")
+
+
+def peak_live_activations(items: list[WorkItem]) -> int:
+    """Max simultaneous saved stage-inputs implied by the timeline: the input
+    of stage s for chunk c is live from fwd(s, c) until bwd(s, c) consumes it
+    (GPipe re-materializes stage internals, so only stage *inputs* persist)."""
+    live = 0
+    peak = 0
+    for it in sorted(items, key=_sort_key):
+        if it.phase == "fwd":
+            live += 1
+            peak = max(peak, live)
+        else:
+            live -= 1
+    return peak
+
+
+# ------------------------------------------------------- list scheduler --
+
+
+def _greedy_timeline(
+    num_stages: int,
+    num_chunks: int,
+    *,
+    device_of,
+    fwd_window,
+    fwd_cost: float = 1.0,
+    bwd_cost: float = 1.0,
+):
+    """Greedy list scheduler over the pipeline DAG.
+
+    Per-stage op streams are FIFO in chunk order (fwds in order, bwds in
+    order); dependencies are
+
+        fwd(s, c)  after  fwd(s-1, c)
+        bwd(s, c)  after  bwd(s+1, c)        (loss grad at s = S-1: after
+                                              fwd(S-1, c))
+        fwd(s, c)  after  bwd(s, c - fwd_window(s))   # 1F1B memory window
+
+    The window dependency caps in-flight activations at stage s to
+    ``fwd_window(s)``; with window = S - s this greedy ASAP scheduler emits
+    exactly the synchronous 1F1B schedule (a window >= C removes the memory
+    cap). Backwards win ties so the drain starts as early as possible.
+    Returns (ops, makespan) where ops maps (stage, chunk, phase) ->
+    (start, end) in cost units.
+    """
+    S, C = num_stages, num_chunks
+    done: dict[tuple[int, int, str], tuple[float, float]] = {}
+    fwd_next = [0] * S
+    bwd_next = [0] * S
+    free_by_dev: dict[int, float] = {}
+    for s in range(S):
+        free_by_dev.setdefault(device_of(s), 0.0)
+
+    n_total = 2 * S * C
+    while len(done) < n_total:
+        best = None
+        for s in range(S):
+            dev = device_of(s)
+            # candidate backward
+            c = bwd_next[s]
+            if c < C:
+                dep = ((S - 1, c, "fwd") if s == S - 1 else (s + 1, c, "bwd"))
+                if dep in done:
+                    start = max(free_by_dev[dev], done[dep][1])
+                    cand = (start, 0, s, c)
+                    if best is None or cand < best[0]:
+                        best = (cand, s, c, "bwd", dev)
+            # candidate forward
+            c = fwd_next[s]
+            if c < C:
+                ready = 0.0
+                ok = True
+                if s > 0:
+                    dep = (s - 1, c, "fwd")
+                    if dep not in done:
+                        ok = False
+                    else:
+                        ready = done[dep][1]
+                w = fwd_window(s)
+                if ok and c - w >= 0:
+                    dep = (s, c - w, "bwd")
+                    if dep not in done:
+                        ok = False
+                    else:
+                        ready = max(ready, done[dep][1])
+                if ok:
+                    start = max(free_by_dev[dev], ready)
+                    cand = (start, 1, s, c)
+                    if best is None or cand < best[0]:
+                        best = (cand, s, c, "fwd", dev)
+        assert best is not None, "scheduler stalled (dependency cycle?)"
+        (start, _, _, _), s, c, phase, dev = best
+        cost = fwd_cost if phase == "fwd" else bwd_cost
+        done[(s, c, phase)] = (start, start + cost)
+        free_by_dev[dev] = start + cost
+        if phase == "fwd":
+            fwd_next[s] += 1
+        else:
+            bwd_next[s] += 1
+
+    makespan = max(end for _, end in done.values())
+    return done, makespan
+
+
+def _ordered_timeline(
+    streams: dict[int, list[tuple[str, int, int]]],
+    num_stages: int,
+    *,
+    fwd_cost: float = 1.0,
+    bwd_cost: float = 1.0,
+):
+    """ASAP tick assignment for per-device *fixed* op streams.
+
+    ``streams[d]`` is device d's op sequence as (phase, stage, chunk); data
+    dependencies are the pipeline DAG (fwd chain, bwd chain, loss at the last
+    stage). Each step schedules the earliest-startable stream head. Returns
+    (ops, makespan) like ``_greedy_timeline``."""
+    S = num_stages
+    done: dict[tuple[int, int, str], tuple[float, float]] = {}
+    ptr = {d: 0 for d in streams}
+    free = {d: 0.0 for d in streams}
+    total = sum(len(v) for v in streams.values())
+    while len(done) < total:
+        best = None
+        for d, ops in streams.items():
+            if ptr[d] >= len(ops):
+                continue
+            phase, s, c = ops[ptr[d]]
+            if phase == "fwd":
+                dep = (s - 1, c, "fwd") if s > 0 else None
+            else:
+                dep = (S - 1, c, "fwd") if s == S - 1 else (s + 1, c, "bwd")
+            if dep is not None and dep not in done:
+                continue
+            start = max(free[d], done[dep][1] if dep else 0.0)
+            cand = (start, d)
+            if best is None or cand < best[0]:
+                best = (cand, d, phase, s, c)
+        assert best is not None, "scheduler stalled: stream order deadlocks"
+        (start, _), d, phase, s, c = best
+        cost = fwd_cost if phase == "fwd" else bwd_cost
+        done[(s, c, phase)] = (start, start + cost)
+        free[d] = start + cost
+        ptr[d] += 1
+    makespan = max(end for _, end in done.values())
+    return done, makespan
+
+
+def _ops_to_items(ops, device_of) -> list[WorkItem]:
+    items = [
+        WorkItem(int(round(start)), s, c, phase, device_of(s))
+        for (s, c, phase), (start, _) in ops.items()
+    ]
+    return sorted(items, key=_sort_key)
+
+
+# ---------------------------------------------------------- the classes --
+
+
+class Schedule(abc.ABC):
+    """A pipeline schedule: emits a WorkItem timeline plus its accounting."""
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def timeline(self, num_stages: int, num_chunks: int) -> list[WorkItem]:
+        """Tick-accurate (unit fwd/bwd cost) timeline, sorted canonically."""
+
+    def num_devices(self, num_stages: int) -> int:
+        """Physical devices the schedule places ``num_stages`` stages on."""
+        return num_stages
+
+    def device_of(self, stage: int, num_stages: int) -> int:
+        return stage
+
+    def ticks(self, num_stages: int, num_chunks: int) -> int:
+        return max(it.tick for it in self.timeline(num_stages, num_chunks)) + 1
+
+    def bubble_fraction(self, num_stages: int, num_chunks: int) -> float:
+        """Idle fraction across devices for the unit-cost timeline: each of
+        the D devices owns 2·S·C/D unit ops out of D·T tick-slots."""
+        T = self.ticks(num_stages, num_chunks)
+        D = self.num_devices(num_stages)
+        work = 2 * num_stages * num_chunks
+        return 1.0 - work / (D * T)
+
+    def peak_live_activations(self, num_stages: int, num_chunks: int) -> int:
+        return peak_live_activations(self.timeline(num_stages, num_chunks))
+
+    def predicted_step_time(
+        self,
+        num_stages: int,
+        num_chunks: int,
+        *,
+        fwd_cost_per_chunk: float,
+        bwd_cost_per_chunk: float,
+        transfer_cost: float = 0.0,
+        rebuild_cost_per_chunk: float = 0.0,
+    ) -> float:
+        """Analytic step time: per-stage per-chunk cost is cost/num_stages
+        (balanced partition) + transfer; the makespan of the schedule's DAG
+        under those costs, plus the paper's host-side rebuild term."""
+        f = fwd_cost_per_chunk / num_stages + transfer_cost
+        b = bwd_cost_per_chunk / num_stages + transfer_cost
+        _, makespan = self._weighted(num_stages, num_chunks, f, b)
+        return makespan + num_chunks * rebuild_cost_per_chunk
+
+    def _weighted(self, S, C, f, b):
+        raise NotImplementedError
+
+    def describe(self, num_stages: int, num_chunks: int) -> dict:
+        return {
+            "schedule": self.name,
+            "num_stages": num_stages,
+            "num_chunks": num_chunks,
+            "num_devices": self.num_devices(num_stages),
+            "ticks": self.ticks(num_stages, num_chunks),
+            "bubble_fraction": self.bubble_fraction(num_stages, num_chunks),
+            "peak_live_activations": self.peak_live_activations(num_stages, num_chunks),
+        }
+
+
+class FillDrainSchedule(Schedule):
+    """GPipe: C+S-1 forward ticks, then C+S-1 backward ticks (the paper)."""
+
+    name = "fill_drain"
+
+    def timeline(self, num_stages: int, num_chunks: int) -> list[WorkItem]:
+        S, C = num_stages, num_chunks
+        items: list[WorkItem] = []
+        # forward: stage s handles chunk c at tick c + s
+        for t in range(C + S - 1):
+            for s in range(S):
+                c = t - s
+                if 0 <= c < C:
+                    items.append(WorkItem(t, s, c, "fwd"))
+        off = C + S - 1
+        # backward: reverse stage order; stage s handles chunk c at tick
+        # off + (C - 1 - c) + (S - 1 - s)
+        for t in range(C + S - 1):
+            for s in range(S):
+                c = (C - 1) - (t - (S - 1 - s))
+                if 0 <= c < C:
+                    items.append(WorkItem(off + t, s, c, "bwd"))
+        return sorted(items, key=_sort_key)
+
+    def ticks(self, num_stages: int, num_chunks: int) -> int:
+        return 2 * (num_chunks + num_stages - 1)
+
+    def bubble_fraction(self, num_stages: int, num_chunks: int) -> float:
+        return (num_stages - 1) / (num_chunks + num_stages - 1)
+
+    def peak_live_activations(self, num_stages: int, num_chunks: int) -> int:
+        # every stage holds all C inputs when the forward finishes
+        return num_stages * num_chunks
+
+    def predicted_step_time(
+        self,
+        num_stages: int,
+        num_chunks: int,
+        *,
+        fwd_cost_per_chunk: float,
+        bwd_cost_per_chunk: float,
+        transfer_cost: float = 0.0,
+        rebuild_cost_per_chunk: float = 0.0,
+    ) -> float:
+        # closed form (the paper's model): critical path is C + S - 1 ticks
+        # in each phase
+        f = fwd_cost_per_chunk / num_stages + transfer_cost
+        b = bwd_cost_per_chunk / num_stages + transfer_cost
+        ticks = num_chunks + num_stages - 1
+        return ticks * (f + b) + num_chunks * rebuild_cost_per_chunk
+
+
+class OneFOneBSchedule(Schedule):
+    """Synchronous 1F1B (PipeDream-flush): stage s runs min(S-s, C) warmup
+    forwards then strictly alternates bwd/fwd, capping live activations at
+    min(S-s, C) instead of C. Same optimizer semantics as fill-drain (one
+    flush per step); same bubble for equal tick costs; far less memory."""
+
+    name = "1f1b"
+
+    def _ops(self, S, C, f=1.0, b=1.0):
+        return _greedy_timeline(
+            S, C, device_of=lambda s: s, fwd_window=lambda s: S - s,
+            fwd_cost=f, bwd_cost=b,
+        )
+
+    def timeline(self, num_stages: int, num_chunks: int) -> list[WorkItem]:
+        ops, _ = self._ops(num_stages, num_chunks)
+        return _ops_to_items(ops, lambda s: s)
+
+    def _weighted(self, S, C, f, b):
+        return self._ops(S, C, f, b)
+
+
+class InterleavedSchedule(Schedule):
+    """Interleaved 1F1B over virtual stages (Megatron-LM's interleaving):
+    ``num_physical`` devices each host V = S/num_physical virtual stages,
+    stage k on device k mod num_physical; activations hop circularly. Each
+    device runs (D-d-1)·2 + (V-1)·D warmup forwards in D-microbatch groups
+    round-robinned over its virtual stages, then strict 1F1B, then drains.
+    Requires C >= D and C % D == 0 (Megatron's constraint) for a stall-free
+    steady state; the unit-cost makespan is then exactly 2·(V·C + D - 1)
+    ticks — bubble (D-1)/(V·C+D-1), the fill-drain bubble divided by ~V —
+    while holding far fewer live activations than interleaved fill-drain."""
+
+    name = "interleaved"
+
+    def __init__(self, num_physical: int):
+        if num_physical < 1:
+            raise ValueError(f"num_physical must be >= 1, got {num_physical}")
+        self.num_physical = num_physical
+
+    def num_devices(self, num_stages: int) -> int:
+        return self.num_physical
+
+    def device_of(self, stage: int, num_stages: int) -> int:
+        return stage % self.num_physical
+
+    def _check(self, S, C):
+        D = self.num_physical
+        if S % D != 0:
+            raise ValueError(
+                f"interleaved schedule needs num_stages ({S}) divisible by "
+                f"num_physical devices ({D})"
+            )
+        if C < D or C % D != 0:
+            raise ValueError(
+                f"interleaved schedule needs num_chunks ({C}) a positive "
+                f"multiple of num devices ({D})"
+            )
+
+    def _streams(self, S, C):
+        """Per-device op sequences: microbatches advance in groups of D;
+        within a group the device cycles its V virtual stages (fwd ascending,
+        bwd descending), giving Megatron's interleaved order."""
+        D = self.num_physical
+        V = S // D
+        n = C * V  # fwd (and bwd) ops per device
+        streams: dict[int, list[tuple[str, int, int]]] = {}
+        for d in range(D):
+            seq_f = []
+            seq_b = []
+            for i in range(n):
+                vf = (i // D) % V
+                mb = (i // (D * V)) * D + (i % D)
+                seq_f.append(("fwd", vf * D + d, mb))
+                vb = V - 1 - vf
+                seq_b.append(("bwd", vb * D + d, mb))
+            warm = min((D - d - 1) * 2 + (V - 1) * D, n)
+            ops = list(seq_f[:warm])
+            for k in range(n - warm):
+                ops.append(seq_f[warm + k])
+                ops.append(seq_b[k])
+            ops.extend(seq_b[n - warm:])
+            streams[d] = ops
+        return streams
+
+    def _ops(self, S, C, f=1.0, b=1.0):
+        self._check(S, C)
+        return _ordered_timeline(self._streams(S, C), S, fwd_cost=f, bwd_cost=b)
+
+    def timeline(self, num_stages: int, num_chunks: int) -> list[WorkItem]:
+        ops, _ = self._ops(num_stages, num_chunks)
+        D = self.num_physical
+        return _ops_to_items(ops, lambda s: s % D)
+
+    def _weighted(self, S, C, f, b):
+        return self._ops(S, C, f, b)
+
+
+# -------------------------------------------------------------- registry --
+
+SCHEDULES = ("fill_drain", "gpipe", "1f1b", "interleaved")
+
+
+def get_schedule(name: str, *, num_devices: int | None = None) -> Schedule:
+    """Schedule factory. ``num_devices`` is the physical device count for
+    ``interleaved`` (stages are placed round-robin on them); other schedules
+    place one stage per device and ignore it."""
+    if name in ("fill_drain", "gpipe"):
+        return FillDrainSchedule()
+    if name == "1f1b":
+        return OneFOneBSchedule()
+    if name == "interleaved":
+        if num_devices is None:
+            raise ValueError("interleaved schedule requires num_devices")
+        return InterleavedSchedule(num_devices)
+    raise KeyError(f"unknown schedule {name!r}; have {SCHEDULES}")
+
+
+# ------------------------------------------- fill-drain shorthand (paper) --
 
 
 def fill_drain_timeline(num_stages: int, num_chunks: int) -> list[WorkItem]:
-    items: list[WorkItem] = []
-    # forward: stage s handles chunk c at tick c + s
-    for t in range(num_chunks + num_stages - 1):
-        for s in range(num_stages):
-            c = t - s
-            if 0 <= c < num_chunks:
-                items.append(WorkItem(t, s, c, "fwd"))
-    off = num_chunks + num_stages - 1
-    # backward: reverse stage order; stage s handles chunk c at tick
-    # off + (num_chunks - 1 - c) + (num_stages - 1 - s)
-    for t in range(num_chunks + num_stages - 1):
-        for s in range(num_stages):
-            c = (num_chunks - 1) - (t - (num_stages - 1 - s))
-            if 0 <= c < num_chunks:
-                items.append(WorkItem(off + t, s, c, "bwd"))
-    return items
+    return FillDrainSchedule().timeline(num_stages, num_chunks)
 
 
 def bubble_fraction(num_stages: int, num_chunks: int) -> float:
     """Idle fraction of the synchronous fill-drain schedule (per GPipe)."""
-    return (num_stages - 1) / (num_chunks + num_stages - 1)
+    return FillDrainSchedule().bubble_fraction(num_stages, num_chunks)
 
 
 def predicted_step_time(
@@ -61,7 +507,11 @@ def predicted_step_time(
     the critical path runs (C + S - 1) ticks each phase. The paper's observed
     slowdown is the ``rebuild_cost_per_chunk * C`` term (host-side sub-graph
     rebuilds) dominating at small graph scale."""
-    f = fwd_cost_per_chunk / num_stages + transfer_cost
-    b = bwd_cost_per_chunk / num_stages + transfer_cost
-    ticks = num_chunks + num_stages - 1
-    return ticks * (f + b) + num_chunks * rebuild_cost_per_chunk
+    return FillDrainSchedule().predicted_step_time(
+        num_stages,
+        num_chunks,
+        fwd_cost_per_chunk=fwd_cost_per_chunk,
+        bwd_cost_per_chunk=bwd_cost_per_chunk,
+        transfer_cost=transfer_cost,
+        rebuild_cost_per_chunk=rebuild_cost_per_chunk,
+    )

@@ -1,9 +1,12 @@
-"""Compiled SPMD pipeline parallelism (GPipe fill-drain) via shard_map.
+"""Compiled SPMD pipeline parallelism via shard_map.
 
 This is the production-mesh generalization of the paper's technique: the
 host-driven torchgpipe queue schedule becomes a single compiled program —
 one `lax.scan` tick per pipeline slot, `lax.ppermute` moving activations
-stage→stage over the mesh's ``stage_axis``.
+stage→stage over the mesh's ``stage_axis``. Two schedules ship:
+``spmd_pipeline`` (GPipe fill-drain, one stage per device) and
+``spmd_pipeline_interleaved`` (circular placement, V virtual stages per
+device — the bubble shrinks by ~V; see ``repro.core.schedule``).
 
 Contract (everything below happens *inside* shard_map):
 
@@ -120,6 +123,87 @@ def spmd_pipeline(
     return outputs, state
 
 
+def spmd_pipeline_interleaved(
+    stage_fn: Callable[[jax.Array, Any], Any],
+    x: jax.Array,
+    *,
+    stage_axis: str,
+    num_devices: int,
+    num_virtual: int,
+    remat: bool = False,
+    vma_refs: tuple = (),
+):
+    """Circular/interleaved pipeline: each of the D devices on ``stage_axis``
+    hosts V virtual stages placed round-robin (virtual stage k = v·D + d on
+    device d = k mod D), so one ``ppermute`` neighbour hop advances the
+    model; microbatches circulate the ring V times. Fill is D - 1 ticks out
+    of V·C + D - 1 total — the fill-drain bubble divided by ~V — at the cost
+    of V smaller weight shards resident per device.
+
+    ``stage_fn(v, h) -> y`` applies this device's v-th virtual stage
+    (``v`` is a traced int32 scalar in [0, V); build it with
+    ``make_interleaved_stage``). ``x`` is (num_micro, micro_batch, ...) with
+    num_micro >= num_devices; outputs (same shape) are the last virtual
+    stage's per-microbatch results, psum-broadcast over ``stage_axis``.
+
+    Steady-state routing: device d's tick-t work is microbatch
+    c = (t - d) mod C of round v = (t - d) // C. The wire value arriving at
+    device d ≥ 1 each tick is exactly its current microbatch; device 0 banks
+    arrivals from device D-1 in a C-slot rotating buffer until that
+    microbatch's next round comes up (write precedes read inside a tick, so
+    C = D also works). Gradients flow through ppermute/scan + the buffer —
+    the backward pipeline — exactly as in ``spmd_pipeline``.
+    """
+    from repro.core.vma import match_vma
+
+    D, V = num_devices, num_virtual
+    C = x.shape[0]
+    if C < D:
+        raise ValueError(f"interleaved pipeline needs num_micro ({C}) >= devices ({D})")
+    d = lax.axis_index(stage_axis)
+    is_first = d == 0
+    is_last = d == D - 1
+
+    fn = jax.checkpoint(stage_fn) if remat else stage_fn
+
+    def tick_body(carry, t):
+        prev, buf = carry
+        # bank the arriving wire value: it is the sender's tick-(t-1) output,
+        # i.e. microbatch (t - 1 - sender) mod C. Garbage fill/drain ticks
+        # route to the sacrificial slot C.
+        sender = jnp.where(is_first, D - 1, d - 1)
+        sender_rel = t - 1 - sender
+        in_valid = (sender_rel >= 0) & (sender_rel < V * C)
+        w_idx = jnp.where(in_valid, jnp.mod(sender_rel, C), C)
+        buf = lax.dynamic_update_index_in_dim(buf, prev, w_idx, 0)
+
+        # this device's work item
+        rel = t - d
+        c = jnp.mod(rel, C)
+        v = jnp.clip(rel // C, 0, V - 1)
+        first_round = is_first & (rel < C)
+        fresh = lax.dynamic_index_in_dim(x, jnp.clip(c, 0, C - 1), 0, keepdims=False)
+        stored = lax.dynamic_index_in_dim(buf, jnp.clip(c, 0, C - 1), 0, keepdims=False)
+        my_in = jnp.where(first_round, fresh, stored)
+        y = fn(v, my_in)
+
+        nxt = lax.ppermute(
+            y, stage_axis, perm=[(i, (i + 1) % D) for i in range(D)]
+        )
+        return (nxt, buf), y
+
+    prev0 = match_vma(jnp.zeros_like(x[0]), x, vma_refs, extra=(stage_axis,))
+    buf0 = match_vma(
+        jnp.zeros((C + 1,) + x.shape[1:], x.dtype), x, vma_refs, extra=(stage_axis,)
+    )
+    T = V * C + D - 1
+    (_, _), ys = lax.scan(tick_body, (prev0, buf0), jnp.arange(T))
+    # device D-1 runs (v = V-1, chunk c) at tick (V-1)·C + c + D - 1
+    outputs = ys[(V - 1) * C + D - 1 :]
+    outputs = jnp.where(is_last, outputs, jnp.zeros_like(outputs))
+    return lax.psum(outputs, stage_axis)
+
+
 # --------------------------------------------------- homogeneous helpers --
 
 
@@ -167,6 +251,40 @@ def make_scanned_stage(
         h = match_vma(h, params_local, extras_local, h)
         h, _ = lax.scan(one_layer, h, (params_local, extras_local))
         return h, state_mb
+
+    return stage_fn
+
+
+def make_interleaved_stage(
+    block_fn: Callable[[Any, Any, Any], Any],
+    params_local: Any,  # leaves (num_virtual, layers_per_stage, ...)
+    extras_local: Any,
+    *,
+    gather_fn: Callable[[Any], Any] | None = None,
+) -> Callable:
+    """Homogeneous interleaved stage for ``spmd_pipeline_interleaved``:
+    selects this device's v-th virtual-stage slice, then scans ``block_fn``
+    over its layers_per_stage layers."""
+
+    def stage_fn(v, h):
+        from repro.core.vma import match_vma
+
+        pv = jax.tree_util.tree_map(
+            lambda a: lax.dynamic_index_in_dim(a, v, 0, keepdims=False), params_local
+        )
+        ev = jax.tree_util.tree_map(
+            lambda a: lax.dynamic_index_in_dim(a, v, 0, keepdims=False), extras_local
+        )
+
+        def one_layer(c, xs):
+            lp, ex = xs
+            if gather_fn is not None:
+                lp = gather_fn(lp)
+            return block_fn(lp, ex, c), None
+
+        h = match_vma(h, pv, ev, h)
+        h, _ = lax.scan(one_layer, h, (pv, ev))
+        return h
 
     return stage_fn
 

@@ -27,6 +27,8 @@ def vma_of(*refs) -> frozenset[str]:
 
 def match_vma(init, *refs, extra: tuple[str, ...] = ()):
     """Cast every leaf of ``init`` to vary over vma(refs) ∪ extra."""
+    if not hasattr(lax, "pcast"):  # pre-vma JAX: shard_map doesn't track vma
+        return init
     want = vma_of(*refs) | frozenset(extra)
     if not want:
         return init

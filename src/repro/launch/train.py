@@ -8,7 +8,7 @@ Two modes:
 
         PYTHONPATH=src python -m repro.launch.train --mode gnn \
             --dataset pubmed --epochs 300 --stages 4 --chunks 4 \
-            --strategy sequential
+            --strategy sequential --schedule 1f1b
 
   * ``lm`` — pipelined LM pretraining on the synthetic token stream (any
     assigned arch; smoke-sized by default so it runs on CPU):
@@ -52,11 +52,19 @@ def run_gnn(args) -> dict:
         return out
 
     # GPipe path (paper §6): balance the 6-layer sequential model
-    balance = {2: (3, 3), 3: (2, 2, 2), 4: (2, 1, 1, 2)}[args.stages]
-    pipe = GPipe(model, GPipeConfig(balance=balance, chunks=args.chunks))
+    balance = {2: (3, 3), 3: (2, 2, 2), 4: (2, 1, 1, 2), 6: (1, 1, 1, 1, 1, 1)}[args.stages]
+    schedule = getattr(args, "schedule", "fill_drain")
+    pipe_devices = getattr(args, "pipe_devices", None)
+    if schedule == "interleaved" and pipe_devices is None:
+        pipe_devices = 2  # stages -> V = stages/2 virtual stages per device
+    pipe = GPipe(model, GPipeConfig(
+        balance=balance, chunks=args.chunks,
+        schedule=schedule, num_devices=pipe_devices,
+    ))
     plan = make_plan(g, args.chunks, strategy=args.strategy, halo_hops=2, seed=args.seed)
     print(f"[gnn] stages={args.stages} chunks={args.chunks} strategy={args.strategy} "
-          f"edge_cut={plan.edge_cut:.3f} rebuild_s={plan.rebuild_seconds:.3f} "
+          f"schedule={schedule} edge_cut={plan.edge_cut:.3f} "
+          f"rebuild_s={plan.rebuild_seconds:.3f} "
           f"bubble={pipe.describe()['bubble_fraction']:.2f}")
 
     key = jax.random.PRNGKey(args.seed)
@@ -68,10 +76,14 @@ def run_gnn(args) -> dict:
 
     times = []
     loss = jnp.zeros(())
+    sched_stats: dict = {}
     for epoch in range(args.epochs):
         key, rng = jax.random.split(key)
         t0 = time.perf_counter()
-        params, opt_state, loss = pipe.train_step(params, opt_state, plan, rng, optimizer)
+        params, opt_state, loss = pipe.train_step(
+            params, opt_state, plan, rng, optimizer,
+            stats=sched_stats if epoch == 0 else None,
+        )
         jax.block_until_ready(loss)
         times.append(time.perf_counter() - t0)
         if args.log_every and epoch % args.log_every == 0:
@@ -80,8 +92,11 @@ def run_gnn(args) -> dict:
     m = evaluate(params, g)
     out = {
         "mode": f"gpipe-{args.strategy}",
+        "schedule": schedule,
         "chunks": args.chunks,
         "edge_cut": plan.edge_cut,
+        "bubble_fraction": sched_stats.get("bubble_fraction"),
+        "peak_live_activations": sched_stats.get("measured_peak_live_activations"),
         "train_loss": float(m["train_loss"]),
         "train_acc": float(m["train_acc"]),
         "val_acc": float(m["val_acc"]),
@@ -155,6 +170,10 @@ def main():
     ap.add_argument("--full-arch", action="store_true", help="use the full (not smoke) config")
     ap.add_argument("--backend", default="padded", choices=["padded", "dense", "pallas"])
     ap.add_argument("--strategy", default="sequential")
+    ap.add_argument("--schedule", default="fill_drain",
+                    choices=["fill_drain", "gpipe", "1f1b", "interleaved"])
+    ap.add_argument("--pipe-devices", type=int, default=None,
+                    help="interleaved: physical devices (virtual stages = stages/devices)")
     ap.add_argument("--stages", type=int, default=1)
     ap.add_argument("--chunks", type=int, default=1)
     ap.add_argument("--epochs", type=int, default=300)

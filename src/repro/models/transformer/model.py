@@ -32,6 +32,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import compat
 from repro.configs.base import ArchConfig, ShapeConfig, pipeline_padding
 from repro.core.spmd_pipe import (
     make_gather_fn,
@@ -525,7 +526,7 @@ def make_train_step(
         shared = params.get("shared_attn", ())
         shared_spec = specs.get("shared_attn", ())
         yspec = P(topo.data_axes, topo.stage_axis, None)
-        y = jax.shard_map(
+        y = compat.shard_map(
             pipe_body,
             mesh=mesh,
             in_specs=(specs["blocks"], shared_spec, ex_specs, xspec),
@@ -712,7 +713,7 @@ def make_serve_step(
         # batch-replicated decode (long_500k): the cache is genuinely
         # invariant over idle mesh axes but shard_map cannot infer it
         # through the gathered-param dataflow — skip the static check.
-        y, cache = jax.shard_map(
+        y, cache = compat.shard_map(
             pipe_body,
             mesh=mesh,
             in_specs=(specs["blocks"], shared_spec, ex_specs, cache_specs, xspec, P()),
@@ -779,7 +780,7 @@ def make_prefill_step(
         shared = params.get("shared_attn", ())
         shared_spec = specs.get("shared_attn", ())
         yspec = P(topo.data_axes, topo.stage_axis, None)
-        y, cache = jax.shard_map(
+        y, cache = compat.shard_map(
             pipe_body,
             mesh=mesh,
             in_specs=(specs["blocks"], shared_spec, ex_specs, cache_specs, xspec),

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional-hypothesis shim
 
 from repro.graphs import load_dataset, validate_graph, DATASETS
 from repro.graphs.data import build_graph_batch, subgraph
@@ -60,7 +60,6 @@ def test_sequential_partition_covers(chunks, seed):
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 5))
 def test_greedy_partition_cuts_fewer_edges(seed):
-    rng = np.random.default_rng(seed)
     # community-structured graph so locality is exploitable
     g = load_dataset("karate", seed=seed)
     seq = P.sequential_partition(g.num_nodes, 4)

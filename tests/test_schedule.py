@@ -1,0 +1,171 @@
+"""Schedule subsystem: timeline validity invariants, bubble/memory
+accounting, and schedule dominance (1F1B/interleaved vs fill-drain)."""
+
+import pytest
+
+from repro.core.schedule import (
+    FillDrainSchedule,
+    InterleavedSchedule,
+    OneFOneBSchedule,
+    WorkItem,
+    bubble_fraction,
+    get_schedule,
+    peak_live_activations,
+    validate_timeline,
+)
+
+GRID = [(2, 2), (2, 4), (3, 3), (3, 6), (4, 4), (4, 8), (6, 8), (1, 4), (4, 2)]
+INTERLEAVED_GRID = [  # (num_devices, num_stages, num_chunks); V = S / D
+    (2, 4, 4), (2, 4, 8), (2, 6, 4), (4, 8, 8), (3, 6, 6), (2, 8, 2), (1, 4, 4),
+]
+
+
+def _schedules_for(S, C):
+    scheds = [get_schedule("fill_drain"), get_schedule("1f1b")]
+    for D in range(1, S + 1):
+        if S % D == 0 and C % D == 0 and C >= D:
+            scheds.append(get_schedule("interleaved", num_devices=D))
+    return scheds
+
+
+# ------------------------------------------------------ validity invariants --
+
+
+@pytest.mark.parametrize("S,C", GRID)
+def test_timelines_valid_all_schedules(S, C):
+    """Each (stage, chunk, phase) exactly once; a chunk's bwd never precedes
+    its fwd; stage dependencies respected; no device double-booked."""
+    for sched in _schedules_for(S, C):
+        validate_timeline(sched.timeline(S, C), S, C)
+
+
+@pytest.mark.parametrize("S,C", GRID)
+def test_timeline_sorted_and_ticks(S, C):
+    for sched in _schedules_for(S, C):
+        tl = sched.timeline(S, C)
+        assert [it.tick for it in tl] == sorted(it.tick for it in tl)
+        assert sched.ticks(S, C) == max(it.tick for it in tl) + 1
+
+
+def test_fill_drain_closed_form_matches_timeline():
+    fd = FillDrainSchedule()
+    for S, C in GRID:
+        tl = fd.timeline(S, C)
+        assert fd.ticks(S, C) == 2 * (C + S - 1)
+        assert fd.peak_live_activations(S, C) == S * C == peak_live_activations(tl)
+        # generic timeline-based accounting agrees with the paper's formula
+        generic = 1.0 - 2 * S * C / (S * fd.ticks(S, C))
+        assert abs(fd.bubble_fraction(S, C) - generic) < 1e-12
+        assert abs(fd.bubble_fraction(S, C) - (S - 1) / (C + S - 1)) < 1e-12
+
+
+def test_device_placement():
+    il = InterleavedSchedule(2)
+    tl = il.timeline(4, 4)
+    for it in tl:
+        assert it.device == it.stage % 2
+    fd = get_schedule("fill_drain")
+    assert all(it.device == it.stage for it in fd.timeline(3, 3))
+
+
+# ----------------------------------------------------------- dominance --
+
+
+@pytest.mark.parametrize("S,C", [(s, c) for s, c in GRID if c >= s])
+def test_1f1b_dominates_fill_drain(S, C):
+    """For C >= S: 1F1B's bubble accounting is <= fill-drain's and (for
+    S >= 2, C > 2) its peak live-activation count is strictly lower."""
+    fd, ob = FillDrainSchedule(), OneFOneBSchedule()
+    assert ob.bubble_fraction(S, C) <= fd.bubble_fraction(S, C) + 1e-12
+    assert ob.ticks(S, C) <= fd.ticks(S, C)
+    if S >= 2 and C > 2:
+        assert ob.peak_live_activations(S, C) < fd.peak_live_activations(S, C)
+    else:
+        assert ob.peak_live_activations(S, C) <= fd.peak_live_activations(S, C)
+
+
+def test_1f1b_peak_is_sum_of_windows():
+    """1F1B caps stage s at min(S - s, C) in-flight activations."""
+    ob = OneFOneBSchedule()
+    for S, C in GRID:
+        want = sum(min(S - s, C) for s in range(S))
+        assert ob.peak_live_activations(S, C) == want, (S, C)
+
+
+@pytest.mark.parametrize("D,S,C", INTERLEAVED_GRID)
+def test_interleaved_bubble_beats_fill_drain_at_same_device_count(D, S, C):
+    """V virtual stages per device divide the bubble by ~V: interleaved on D
+    devices always has bubble <= fill-drain with S = D stages (strictly
+    smaller whenever V > 1 and there is a bubble at all)."""
+    il = InterleavedSchedule(D)
+    V = S // D
+    fd_bubble = bubble_fraction(D, C)  # fill-drain on the same D devices
+    il_bubble = il.bubble_fraction(S, C)
+    assert il_bubble <= fd_bubble + 1e-12
+    if V > 1 and D > 1:
+        assert il_bubble < fd_bubble
+    # Megatron's closed form: fill = D - 1 ticks around V*C work ticks
+    assert il.ticks(S, C) == 2 * (V * C + D - 1)
+    assert abs(il_bubble - (D - 1) / (V * C + D - 1)) < 1e-12
+
+
+def test_interleaved_validation_errors():
+    il = InterleavedSchedule(2)
+    with pytest.raises(ValueError):
+        il.timeline(5, 4)  # stages not divisible by devices
+    with pytest.raises(ValueError):
+        il.timeline(4, 3)  # chunks not a multiple of devices
+    with pytest.raises(ValueError):
+        get_schedule("interleaved")  # num_devices required
+    with pytest.raises(KeyError):
+        get_schedule("no-such-schedule")
+
+
+# ------------------------------------------------------- cost accounting --
+
+
+def test_predicted_step_time_ordering():
+    """At a fixed device count, interleaved's weighted makespan undercuts
+    fill-drain's and 1F1B's (which tie for equal per-phase costs)."""
+    kw = dict(fwd_cost_per_chunk=1.0, bwd_cost_per_chunk=2.0)
+    fd = get_schedule("fill_drain").predicted_step_time(2, 4, **kw)
+    ob = get_schedule("1f1b").predicted_step_time(2, 4, **kw)
+    il = get_schedule("interleaved", num_devices=2).predicted_step_time(4, 4, **kw)
+    assert abs(fd - ob) < 1e-9
+    assert il < fd
+    # rebuild term is schedule-independent
+    fd_r = get_schedule("fill_drain").predicted_step_time(
+        2, 4, rebuild_cost_per_chunk=0.5, **kw
+    )
+    assert abs((fd_r - fd) - 4 * 0.5) < 1e-9
+
+
+def test_validate_timeline_catches_violations():
+    fd = FillDrainSchedule()
+    S, C = 3, 3
+    good = fd.timeline(S, C)
+    with pytest.raises(AssertionError):  # duplicate item
+        validate_timeline(good + [good[0]], S, C)
+    bad = [
+        WorkItem(it.tick, it.stage, it.chunk, it.phase)
+        for it in good
+        if not (it.stage == 0 and it.chunk == 0 and it.phase == "fwd")
+    ]
+    with pytest.raises(AssertionError):  # missing item
+        validate_timeline(bad, S, C)
+    # bwd before its fwd
+    flipped = [
+        WorkItem(
+            (2 * (C + S - 1) - 1) - it.tick, it.stage, it.chunk, it.phase
+        )
+        for it in good
+    ]
+    with pytest.raises(AssertionError):
+        validate_timeline(flipped, S, C)
+
+
+def test_describe_keys():
+    d = get_schedule("1f1b").describe(4, 8)
+    for key in ("schedule", "ticks", "bubble_fraction", "peak_live_activations"):
+        assert key in d
+    assert d["schedule"] == "1f1b"

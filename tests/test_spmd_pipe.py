@@ -37,6 +37,12 @@ def test_pipeline_fwd_grad_equivalence():
     out = _run("""
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    try:
+        shard_map = jax.shard_map
+        SM_KW = {}
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+        SM_KW = {"check_rep": False}  # old-jax scan-transpose rep tracking
     from repro.core.spmd_pipe import spmd_pipeline, make_scanned_stage, make_gather_fn
 
     mesh = jax.make_mesh((2, 4), ('data', 'model'))
@@ -59,10 +65,10 @@ def test_pipeline_fwd_grad_equivalence():
                                remat=True, vma_refs=(wp,))
         return out
 
-    f = jax.jit(jax.shard_map(pipe, mesh=mesh,
+    f = jax.jit(shard_map(pipe, mesh=mesh,
         in_specs=({'w': P('model', None, 'data', None)}, {'active': P('model', None)},
                   P(None, 'data', None)),
-        out_specs=P(None, 'data', None)))
+        out_specs=P(None, 'data', None), **SM_KW))
     out = f({'w': w}, extras, x)
     ref = x
     for s in range(S):
@@ -89,6 +95,12 @@ def test_pipeline_scatter_dim_equivalence():
     out = _run("""
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    try:
+        shard_map = jax.shard_map
+        SM_KW = {}
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+        SM_KW = {"check_rep": False}  # old-jax scan-transpose rep tracking
     from repro.core.spmd_pipe import spmd_pipeline, make_scanned_stage
 
     mesh = jax.make_mesh((2, 4), ('data', 'model'))
@@ -108,10 +120,10 @@ def test_pipeline_scatter_dim_equivalence():
                                scatter_dim=2, vma_refs=(wp,))
         return out
 
-    f = jax.jit(jax.shard_map(pipe, mesh=mesh,
+    f = jax.jit(shard_map(pipe, mesh=mesh,
         in_specs=({'w': P('model', None, None, None)}, {'active': P('model', None)},
                   P(None, 'data', None, None)),
-        out_specs=P(None, 'data', 'model', None)))
+        out_specs=P(None, 'data', 'model', None), **SM_KW))
     out = f({'w': w}, ex, x)   # (NM, mb, SEQ, D) with SEQ sharded over model
     ref = x
     for s in range(S):
@@ -128,6 +140,12 @@ def test_stateful_pipeline_cache_writes():
     out = _run("""
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    try:
+        shard_map = jax.shard_map
+        SM_KW = {}
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+        SM_KW = {"check_rep": False}  # old-jax scan-transpose rep tracking
     from repro.core.spmd_pipe import spmd_pipeline, make_scanned_stage_stateful
 
     mesh = jax.make_mesh((4,), ('model',))
@@ -148,10 +166,10 @@ def test_stateful_pipeline_cache_writes():
                                  state=st[0], vma_refs=(wp,))
         return out, st2[None]
 
-    f = jax.jit(jax.shard_map(pipe, mesh=mesh,
+    f = jax.jit(shard_map(pipe, mesh=mesh,
         in_specs=({'w': P('model', None, None, None)}, {'active': P('model', None)},
                   P(None, None, None), P('model', None, None, None, None)),
-        out_specs=(P(None, None, None), P('model', None, None, None, None))))
+        out_specs=(P(None, None, None), P('model', None, None, None, None)), **SM_KW))
     out, st2 = f({'w': w}, ex, x, state)
     # stage 0's cached input for microbatch m must equal x[m]
     st0 = st2[0]   # (NM, PER, mb, D)
@@ -162,6 +180,92 @@ def test_stateful_pipeline_cache_writes():
     print('STATE_OK')
     """)
     assert "STATE_OK" in out
+
+
+@pytest.mark.slow
+def test_interleaved_pipeline_fwd_grad_equivalence():
+    """Circular/interleaved pipeline: D devices x V virtual stages each;
+    forward matches the sequential reference and grads flow through the
+    ppermute ring + rotating chunk buffer."""
+    out = _run("""
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    try:
+        shard_map = jax.shard_map
+        SM_KW = {}
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+        SM_KW = {"check_rep": False}  # old-jax scan-transpose rep tracking
+    from repro.core.spmd_pipe import spmd_pipeline_interleaved, make_interleaved_stage
+
+    mesh = jax.make_mesh((2,), ('model',))
+    D, V, PER, NM, B, Dm = 2, 2, 2, 4, 8, 16
+    S = D * V
+    w = jax.random.normal(jax.random.PRNGKey(0), (S, PER, Dm, Dm)) * 0.3
+    x = jax.random.normal(jax.random.PRNGKey(1), (NM, B // NM, Dm))
+
+    def dev_stack(a):   # (S, ...) -> (D, V, ...); device d holds stages v*D + d
+        return jnp.stack([jnp.stack([a[v*D + d] for v in range(V)]) for d in range(D)])
+
+    wp = {'w': dev_stack(w)}
+    ex = {'active': dev_stack(jnp.ones((S, PER)))}
+
+    def block_fn(lp, exx, h):
+        return jnp.where(exx['active'] > 0, jnp.tanh(h @ lp['w']), h)
+
+    def pipe(wpp, exx, xm):
+        stage_fn = make_interleaved_stage(
+            block_fn,
+            jax.tree_util.tree_map(lambda a: a[0], wpp),
+            jax.tree_util.tree_map(lambda a: a[0], exx))
+        return spmd_pipeline_interleaved(stage_fn, xm, stage_axis='model',
+                                         num_devices=D, num_virtual=V,
+                                         remat=True, vma_refs=(wpp,))
+
+    f = jax.jit(shard_map(pipe, mesh=mesh,
+        in_specs=({'w': P('model')}, {'active': P('model')}, P()),
+        out_specs=P(), **SM_KW))
+    out = f(wp, ex, x)
+    ref = x
+    for k in range(S):
+        for i in range(PER):
+            ref = jnp.tanh(ref @ w[k, i])
+    assert jnp.allclose(out, ref, atol=1e-5), float(jnp.max(jnp.abs(out - ref)))
+
+    g1 = jax.grad(lambda wd: jnp.sum(f(wd, ex, x) ** 2) / 2)(wp)
+    def loss_ref(wd):
+        h = x
+        for k in range(S):
+            for i in range(PER):
+                h = jnp.tanh(h @ wd[k, i])
+        return jnp.sum(h ** 2) / 2
+    g2 = dev_stack(jax.grad(loss_ref)(w))
+    assert jnp.allclose(g1['w'], g2, atol=1e-4), float(jnp.max(jnp.abs(g1['w'] - g2)))
+
+    # C == D edge (same-tick buffer write/read) and deeper virtual stacks
+    mesh4 = jax.make_mesh((4,), ('model',))
+    for D2, V2, NM2 in [(4, 2, 4), (4, 3, 8)]:
+        S2 = D2 * V2
+        w2 = jax.random.normal(jax.random.PRNGKey(2), (S2, 1, Dm, Dm)) * 0.3
+        x2 = jax.random.normal(jax.random.PRNGKey(3), (NM2, 4, Dm))
+        def ds(a, D=D2, V=V2):
+            return jnp.stack([jnp.stack([a[v*D + d] for v in range(V)]) for d in range(D)])
+        def pipe2(wpp, xm, D=D2, V=V2):
+            sf = make_interleaved_stage(lambda lp, e, h: jnp.tanh(h @ lp),
+                                        jax.tree_util.tree_map(lambda a: a[0], wpp),
+                                        jax.tree_util.tree_map(lambda a: a[0], wpp) * 0)
+            return spmd_pipeline_interleaved(sf, xm, stage_axis='model',
+                                             num_devices=D, num_virtual=V, vma_refs=(wpp,))
+        f2 = jax.jit(shard_map(pipe2, mesh=mesh4, in_specs=(P('model'), P()),
+                               out_specs=P(), **SM_KW))
+        o2 = f2(ds(w2), x2)
+        r2 = x2
+        for k in range(S2):
+            r2 = jnp.tanh(r2 @ w2[k, 0])
+        assert jnp.allclose(o2, r2, atol=1e-5), float(jnp.max(jnp.abs(o2 - r2)))
+    print('INTERLEAVED_OK')
+    """)
+    assert "INTERLEAVED_OK" in out
 
 
 @pytest.mark.slow

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional-hypothesis shim
 
 from repro.data.tokens import token_batch, frontend_embeds
 from repro.train import optimizer as opt_lib
