@@ -6,7 +6,10 @@ epoch time AND the isolated rebuild cost so the overhead source is explicit.
 Beyond-paper: every chunk count also runs under each pipeline schedule
 (fill-drain / 1F1B / interleaved where legal), emitting the schedule's
 bubble fraction and measured peak live activations next to the epoch time —
-the schedule-comparison columns for the ROADMAP's speed axis.
+the schedule-comparison columns for the ROADMAP's speed axis. The
+``compiled`` rows rerun fill-drain on the compiled SPMD engine (one jitted
+program instead of the host queue loop) so engine regressions show up in
+the same perf table; ``compiled_vs_host`` reports the speedup directly.
 """
 
 from __future__ import annotations
@@ -27,16 +30,19 @@ def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES):
     stages, pipe_devices = 4, 2
     for chunks in range(1, max_chunks + 1):
         plan = make_plan(g, chunks, strategy="sequential")
+        host_epoch_s = None
         for schedule in schedules:
             args = types.SimpleNamespace(
                 mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
                 stages=stages, chunks=chunks, epochs=epochs, seed=0, log_every=0,
-                schedule=schedule, pipe_devices=pipe_devices,
+                schedule=schedule, pipe_devices=pipe_devices, engine="host",
             )
             try:
                 r = run_gnn(args)
             except ValueError:
                 continue  # schedule rejects this (stages, chunks) combo
+            if schedule == "fill_drain":
+                host_epoch_s = r["avg_epoch_s"]
             emit(
                 f"fig3/{dataset}/{schedule}_chunks{chunks}",
                 r["avg_epoch_s"] * 1e6,
@@ -45,4 +51,19 @@ def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES):
                 f"peak_live={r['peak_live_activations']}",
             )
             rows.append((schedule, chunks, r["avg_epoch_s"], plan.rebuild_seconds))
+        # compiled-engine smoke: same plan/seed, fill-drain, one fused program
+        args = types.SimpleNamespace(
+            mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
+            stages=stages, chunks=chunks, epochs=epochs, seed=0, log_every=0,
+            schedule="fill_drain", pipe_devices=None, engine="compiled",
+        )
+        r = run_gnn(args)
+        speedup = host_epoch_s / r["avg_epoch_s"] if host_epoch_s else float("nan")
+        emit(
+            f"fig3/{dataset}/compiled_chunks{chunks}",
+            r["avg_epoch_s"] * 1e6,
+            f"rebuild_s={plan.rebuild_seconds:.3f};edge_cut={plan.edge_cut:.3f};"
+            f"compiled_vs_host={speedup:.2f}x",
+        )
+        rows.append(("compiled", chunks, r["avg_epoch_s"], plan.rebuild_seconds))
     return rows

@@ -26,10 +26,11 @@ import dataclasses
 import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.graphs import partition as P
-from repro.graphs.data import GraphBatch, subgraph
+from repro.graphs.data import GraphBatch, pad_graph, subgraph
 
 STRATEGIES = ("sequential", "random", "greedy", "halo", "sign")
 
@@ -44,6 +45,20 @@ class MicroBatch:
         return self.graph.num_nodes
 
 
+@dataclasses.dataclass(frozen=True)
+class StackedPlan:
+    """A MicroBatchPlan as ONE uniform-shape pytree: every chunk padded to the
+    same node count and neighbor width, then stacked on a leading chunk axis.
+    This is the layout the compiled SPMD engine feeds to ``lax.scan`` — the
+    subgraphs ride the pipeline with the activations."""
+
+    graph: GraphBatch  # leaves (chunks, n_pad, ...)
+    core_mask: jnp.ndarray  # (chunks, n_pad) bool
+    chunks: int
+    n_pad: int  # padded node count per chunk
+    max_deg: int  # padded neighbor width per chunk
+
+
 @dataclasses.dataclass
 class MicroBatchPlan:
     strategy: str
@@ -51,6 +66,28 @@ class MicroBatchPlan:
     batches: list[MicroBatch]
     rebuild_seconds: float  # host-side sub-graph construction cost (Fig 3)
     edge_cut: float  # fraction of edges lost (0 for halo/sign)
+    _stacked: StackedPlan | None = dataclasses.field(default=None, repr=False)
+
+    def stacked(self) -> StackedPlan:
+        """Emit (and cache) the stacked uniform-shape pytree: node counts and
+        ``max_deg`` are padded to the per-plan maxima so all chunks share one
+        shape and can ride a ``lax.scan``."""
+        if self._stacked is None:
+            n_pad = max(mb.num_nodes for mb in self.batches)
+            max_deg = max(mb.graph.max_degree for mb in self.batches)
+            graphs, cores = [], []
+            for mb in self.batches:
+                graphs.append(pad_graph(mb.graph, n_pad, max_deg))
+                pad = n_pad - mb.core_mask.shape[0]
+                cores.append(jnp.pad(mb.core_mask, (0, pad)) if pad else mb.core_mask)
+            self._stacked = StackedPlan(
+                graph=jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *graphs),
+                core_mask=jnp.stack(cores),
+                chunks=self.chunks,
+                n_pad=n_pad,
+                max_deg=max_deg,
+            )
+        return self._stacked
 
 
 def make_plan(
@@ -94,13 +131,8 @@ def make_plan(
 
     pad_n = max(sizes) if pad_to_max else None
     for nodes, core in specs:
-        if pad_n is not None and len(nodes) < pad_n:
-            # pad by repeating node 0 with core_mask False; padded rows also
-            # get their edges dropped in subgraph() via the remap, but their
-            # loss mask is off so they are inert.
-            extra = pad_n - len(nodes)
-            nodes = np.concatenate([nodes, np.zeros(extra, dtype=nodes.dtype)])
-            core = np.concatenate([core, np.zeros(extra, dtype=bool)])
+        if pad_n is not None:
+            nodes, core = P.pad_partition(nodes, core, pad_n)
         sub = subgraph(g, nodes)
         # padded duplicates of node 0 must not train/eval either
         batches.append(MicroBatch(graph=sub, core_mask=jnp.asarray(core)))

@@ -1,6 +1,24 @@
-"""GPipe for GNNs — the paper's §6 implementation, JAX-native.
+"""Pipeline engines for GNNs — one interface, two executors.
 
-Faithful semantics:
+``PipelineEngine`` is the contract (init_params / train_step / describe);
+two implementations ship:
+
+  * ``GPipe`` — the paper's §6 implementation, JAX-native and host-driven:
+    the pluggable ``Schedule`` timeline executes at Python level with
+    per-stage jitted kernels, mirroring torchgpipe's queues. Paper-faithful;
+    schedules (fill-drain / 1F1B / interleaved) untouched.
+  * ``CompiledGNNPipeline`` — the whole train step (forward pipeline over
+    ``lax.scan`` + ``lax.ppermute``, loss over core masks, backward through
+    the same collectives, canonical gradient reduction, optimizer update) is
+    ONE jitted SPMD program over a ``("stage",)`` mesh axis. The micro-batch
+    plan rides as a stacked uniform-shape pytree (``MicroBatchPlan.stacked``)
+    so the subgraphs travel with the activations. With fewer devices than
+    stages the same program body runs under ``jax.vmap(axis_name="stage")``
+    — identical collective semantics, still one fused XLA program.
+
+``make_engine("host" | "compiled", model, config)`` picks one.
+
+GPipe's faithful semantics:
 
   * the sequential model is partitioned into stages by a ``balance`` array
     (same contract as ``torchgpipe.GPipe(model, balance, chunks)``);
@@ -18,11 +36,6 @@ Faithful semantics:
     schedule's update bit-identical to the fill-drain baseline. Only lossy
     micro-batching of the graph moves the numbers (measured by
     ``plan.edge_cut``).
-
-The schedule is driven at Python level with per-stage jitted kernels (and
-optional per-stage device placement), mirroring torchgpipe's host-driven
-queues; the compiled SPMD pipeline for the production mesh lives in
-``repro.core.spmd_pipe``.
 """
 
 from __future__ import annotations
@@ -31,12 +44,17 @@ import dataclasses
 import time
 from typing import Any
 
+import numpy as np
 import jax
 import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core.microbatch import MicroBatchPlan
 from repro.core.schedule import get_schedule
-from repro.models.gnn.net import GNNModel
+from repro.core.spmd_pipe import spmd_pipeline
+from repro.models.gnn.net import GNNModel, activation_widths, make_gnn_stage, travel_width
 from repro.train import optimizer as opt_lib
 
 
@@ -47,14 +65,19 @@ class GPipeConfig:
     devices: tuple | None = None  # optional per-stage device placement
     schedule: str = "fill_drain"  # "fill_drain" | "gpipe" | "1f1b" | "interleaved"
     num_devices: int | None = None  # interleaved: physical devices (V = stages/devices)
+    remat: bool = True  # compiled engine: GPipe-style activation re-materialization
 
     @property
     def num_stages(self) -> int:
         return len(self.balance)
 
 
-class GPipe:
-    """Pipeline-parallel wrapper around a sequential ``GNNModel``."""
+class PipelineEngine:
+    """Contract both engines implement: partition a sequential ``GNNModel``
+    by a ``balance`` array, then run synchronous pipeline train steps over a
+    ``MicroBatchPlan``. Subclasses provide ``train_step``."""
+
+    name = "base"
 
     def __init__(self, model: GNNModel, config: GPipeConfig):
         if sum(config.balance) != len(model.layers):
@@ -70,15 +93,60 @@ class GPipe:
             self._bounds.append((lo, lo + b))
             lo += b
 
-        self._fwd_fns = [self._make_fwd(s) for s in range(config.num_stages)]
-        self._bwd_fns = [self._make_bwd(s) for s in range(config.num_stages)]
-        self._loss_grad = jax.jit(jax.value_and_grad(_chunk_loss_sum, argnums=0, has_aux=True))
-
     # ------------------------------------------------------------ stages --
 
     def stage_params(self, params: list, s: int) -> list:
         lo, hi = self._bounds[s]
         return params[lo:hi]
+
+    def _stage_of_layer(self, layer_idx: int) -> int:
+        for s, (lo, hi) in enumerate(self._bounds):
+            if lo <= layer_idx < hi:
+                return s
+        raise IndexError(layer_idx)
+
+    # ---------------------------------------------------------- contract --
+
+    def init_params(self, key: jax.Array) -> list:
+        return self.model.init_params(key)
+
+    def train_step(
+        self,
+        params: list,
+        opt_state,
+        plan: MicroBatchPlan,
+        rng: jax.Array,
+        optimizer: opt_lib.Optimizer,
+        *,
+        record: list | None = None,
+        stats: dict | None = None,
+    ):
+        raise NotImplementedError
+
+    def describe(self) -> dict:
+        d = self.schedule.describe(self.config.num_stages, self.config.chunks)
+        d.update(
+            {
+                "engine": self.name,
+                "balance": list(self.config.balance),
+                "chunks": self.config.chunks,
+                "layers": [l.name for l in self.model.layers],
+            }
+        )
+        return d
+
+
+class GPipe(PipelineEngine):
+    """Host-driven pipeline-parallel wrapper around a sequential ``GNNModel``
+    (the paper's §6 torchgpipe analogue; schedules are pluggable)."""
+
+    name = "host"
+
+    def __init__(self, model: GNNModel, config: GPipeConfig):
+        super().__init__(model, config)
+        self._fwd_fns = [self._make_fwd(s) for s in range(config.num_stages)]
+        self._bwd_fns = [self._make_bwd(s) for s in range(config.num_stages)]
+        self._loss_grad = jax.jit(jax.value_and_grad(_chunk_loss_sum, argnums=0, has_aux=True))
 
     def _stage_apply(self, s: int, stage_params: list, mb_graph, h, rngs, train: bool):
         lo, hi = self._bounds[s]
@@ -122,12 +190,6 @@ class GPipe:
                 self._place(p, self._stage_of_layer(i)) for i, p in enumerate(params)
             ]
         return params
-
-    def _stage_of_layer(self, layer_idx: int) -> int:
-        for s, (lo, hi) in enumerate(self._bounds):
-            if lo <= layer_idx < hi:
-                return s
-        raise IndexError(layer_idx)
 
     def _layer_rngs(self, rng: jax.Array, chunk: int):
         n_layers = len(self.model.layers)
@@ -244,23 +306,210 @@ class GPipe:
         loss = total_loss / jnp.maximum(total_count, 1.0)
         return params, opt_state, loss
 
-    # ------------------------------------------------------------ report --
-
-    def describe(self) -> dict:
-        d = self.schedule.describe(self.config.num_stages, self.config.chunks)
-        d.update(
-            {
-                "balance": list(self.config.balance),
-                "chunks": self.config.chunks,
-                "layers": [l.name for l in self.model.layers],
-            }
-        )
-        return d
-
-
 def _chunk_loss_sum(log_probs, labels, mask):
     """(Σ nll·mask, Σ mask) — summed form so cross-chunk accumulation equals
     the full-batch masked mean exactly."""
     nll = -jnp.take_along_axis(log_probs, labels[:, None], axis=-1)[:, 0]
     m = mask.astype(jnp.float32)
     return jnp.sum(nll * m), jnp.sum(m)
+
+
+class CompiledGNNPipeline(PipelineEngine):
+    """Compiled SPMD engine: the whole train step is one jitted program.
+
+    The stacked micro-batch plan (``MicroBatchPlan.stacked()``) feeds
+    ``repro.core.spmd_pipe.spmd_pipeline`` with a pytree of per-chunk leaves
+    — padded subgraph + activation + chunk id — so the graph travels
+    stage→stage through ``lax.ppermute`` exactly like the activations, and
+    ``lax.scan`` ticks replace the host-driven queue. The loss is computed
+    from the last stage's outputs (zeros elsewhere, ``reduce="none"``) and
+    psum-assembled; differentiation happens *outside* the stage-axis map —
+    the same structure as the transformer train step — so backward runs
+    through the transposed ``ppermute``/scan and each stage's device
+    contributes exactly its layers' gradients: the canonical cross-stage
+    reduction. One synchronous optimizer update closes the step, fused into
+    the same jitted program.
+
+    Executor substrates (chosen at build time, same update either way):
+
+      * ``jax.device_count() >= num_stages`` — ``shard_map`` over a
+        ``("stage",)`` mesh: true SPMD, one stage per device, activations
+        hopping the ring through ``ppermute``.
+      * fewer devices — the chunk-sequential *specialization*: one fused
+        ``lax.scan`` over chunks applying the whole layer stack. Pipelining
+        only reorders execution, never the math (the engine's
+        schedule-invariance), so on a single device the fastest valid order
+        is no interleaving at all — emulating the ring there (e.g. via
+        ``vmap(axis_name="stage")``) computes every stage's ``switch``
+        branch in every lane, an S× FLOP blow-up for zero parallelism. This
+        is what makes ``--engine compiled`` meaningful on a laptop: one jit
+        dispatch per step instead of 2·S·C.
+
+    The compiled engine executes the fill-drain schedule; 1F1B/interleaved
+    remain host-engine features (the update is schedule-invariant anyway).
+    """
+
+    name = "compiled"
+
+    def __init__(self, model: GNNModel, config: GPipeConfig):
+        if config.schedule not in ("fill_drain", "gpipe"):
+            raise ValueError(
+                f"compiled engine executes the fill-drain schedule, not {config.schedule!r} "
+                "(updates are schedule-invariant; use --engine host for 1f1b/interleaved)"
+            )
+        super().__init__(model, config)
+        self._widths: list[int] | None = None
+        self._steps: dict = {}
+        self._travel_cache: dict = {}
+
+    # ------------------------------------------------------------ program --
+
+    def _make_local_loss(self, widths: list[int]):
+        """Per-device masked-NLL mean over every chunk's core nodes. Runs
+        inside the stage-axis map; the psum assembles the last stage's local
+        sum on every device, so the scalar is replicated."""
+        S = self.config.num_stages
+        model, bounds, remat = self.model, self._bounds, self.config.remat
+
+        def local_loss(params, travel, graph, labels, m, count, rng):
+            stage_fn = make_gnn_stage(
+                model, params, bounds, widths, graph, rng, stage_axis="stage", train=True
+            )
+            out, _ = spmd_pipeline(
+                stage_fn, travel, stage_axis="stage", num_stages=S,
+                remat=remat, reduce="none",
+            )
+            logp = out["h"][..., : model.out_dim]
+            nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+            return lax.psum(jnp.sum(nll * m), "stage") / jnp.maximum(count, 1.0)
+
+        return local_loss
+
+    def _make_scan_loss(self):
+        """Single-device specialization: one ``lax.scan`` over chunks, each
+        applying the full layer stack (no activation-width padding needed —
+        nothing rides a wire). Same per-(chunk, layer) rng derivation and
+        same masked-NLL accumulation as the pipelined program, so the update
+        matches the ring substrate (and the host engine) exactly."""
+        model = self.model
+        n_layers = len(model.layers)
+        remat = self.config.remat
+
+        def scan_loss(params, travel, graph, labels, m, count, rng):
+            def chunk_nll(c):
+                g = jax.tree_util.tree_map(
+                    lambda a: lax.dynamic_index_in_dim(a, c, 0, keepdims=False), graph
+                )
+                rngs = jax.random.split(jax.random.fold_in(rng, c), n_layers)
+                h = g.features
+                for i, layer in enumerate(model.layers):
+                    h = layer.apply(params[i], g, h, rngs[i], True)
+                nll = -jnp.take_along_axis(h, labels[c][:, None], axis=-1)[:, 0]
+                return jnp.sum(nll * m[c])
+
+            body = jax.checkpoint(chunk_nll) if remat else chunk_nll
+
+            def tick(acc, c):
+                return acc + body(c), None
+
+            lsum, _ = lax.scan(tick, jnp.zeros(()), travel["chunk"])
+            return lsum / jnp.maximum(count, 1.0)
+
+        return scan_loss
+
+    def _build_step(self, widths: list[int], optimizer: opt_lib.Optimizer):
+        S = self.config.num_stages
+        if jax.device_count() >= S:
+            mesh = jax.sharding.Mesh(np.array(jax.devices()[:S]), ("stage",))
+            loss_fn = compat.shard_map(
+                self._make_local_loss(widths), mesh=mesh,
+                in_specs=(P(),) * 7, out_specs=P(),
+            )
+        else:
+            loss_fn = self._make_scan_loss()
+
+        def step(params, opt_state, travel, graph, labels, loss_mask, rng):
+            m = loss_mask.astype(jnp.float32)
+            count = jnp.sum(m)
+            # differentiate OUTSIDE the stage-axis map (transformer-style):
+            # backward runs through the transposed ppermute/scan and each
+            # device contributes exactly its stage's layer gradients
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, travel, graph, labels, m, count, rng
+            )
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            params = opt_lib.apply_updates(params, updates)
+            return params, opt_state, loss
+
+        return jax.jit(step)
+
+    def _travel_inputs(self, stacked):
+        """(travel pytree, loss_mask) for one stacked plan, cached. Only the
+        activation buffer and the chunk id travel the wire; the stacked
+        subgraphs enter the program as a replicated constant that branches
+        dynamic-slice by chunk id (see ``make_gnn_stage``). The cache entry
+        retains the StackedPlan itself — an id() key alone could be reused
+        by a new same-shape plan after the old one is garbage-collected and
+        silently serve the stale loss mask."""
+        cached = self._travel_cache.get(id(stacked))
+        if cached is not None and cached[0] is stacked:
+            return cached[1], cached[2]
+        C, n_pad = stacked.chunks, stacked.n_pad
+        travel = {
+            "h": jnp.zeros(
+                (C, n_pad, travel_width(self._bounds, self._widths)),
+                stacked.graph.features.dtype,
+            ),
+            "chunk": jnp.arange(C, dtype=jnp.int32),
+        }
+        loss_mask = stacked.graph.train_mask & stacked.core_mask
+        self._travel_cache[id(stacked)] = (stacked, travel, loss_mask)
+        return travel, loss_mask
+
+    # -------------------------------------------------------------- step --
+
+    def train_step(
+        self,
+        params: list,
+        opt_state,
+        plan: MicroBatchPlan,
+        rng: jax.Array,
+        optimizer: opt_lib.Optimizer,
+        *,
+        record: list | None = None,  # per-item timings don't exist in a fused program
+        stats: dict | None = None,
+    ):
+        stacked = plan.stacked()
+        if self._widths is None:
+            chunk0 = jax.tree_util.tree_map(lambda a: a[0], stacked.graph)
+            self._widths = activation_widths(self.model, params, chunk0)
+        # the cache entry retains the optimizer: an id() key alone could be
+        # reused by a new optimizer after the old one is garbage-collected,
+        # silently serving a step jitted around stale hyperparameters
+        key = (stacked.chunks, stacked.n_pad, stacked.max_deg, id(optimizer))
+        entry = self._steps.get(key)
+        if entry is not None and entry[0] is optimizer:
+            step = entry[1]
+        else:
+            step = self._build_step(self._widths, optimizer)
+            self._steps[key] = (optimizer, step)
+        travel, loss_mask = self._travel_inputs(stacked)
+        if stats is not None:
+            stats.update(self.describe())
+            stats["measured_peak_live_activations"] = None  # fused: not observable
+        return step(
+            params, opt_state, travel, stacked.graph, stacked.graph.labels, loss_mask, rng
+        )
+
+
+ENGINES = {"host": GPipe, "compiled": CompiledGNNPipeline}
+
+
+def make_engine(name: str, model: GNNModel, config: GPipeConfig) -> PipelineEngine:
+    """Engine factory: ``host`` (paper-faithful GPipe queue loop) or
+    ``compiled`` (one jitted SPMD program)."""
+    try:
+        cls = ENGINES[name]
+    except KeyError:
+        raise KeyError(f"unknown engine {name!r}; have {tuple(ENGINES)}") from None
+    return cls(model, config)

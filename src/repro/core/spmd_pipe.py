@@ -15,8 +15,11 @@ Contract (everything below happens *inside* shard_map):
     build them with ``make_scanned_stage`` for the homogeneous case or
     hand-roll for heterogeneous stages (e.g. zamba2's 5 mamba slots + 1
     weight-shared attention slot).
-  * ``x``: (num_micro, micro_batch, ...) — this device's data shard, already
-    microbatched. Stage 0 consumes microbatch ``t`` at tick ``t``; the last
+  * ``x``: any pytree whose leaves are (num_micro, ...) — this device's data,
+    already microbatched. A single array is the LM case; the GNN engine sends
+    a whole pytree (activations + padded subgraph + chunk id) so the graph
+    travels stage→stage with the activations, and ``y`` must mirror ``x``'s
+    structure. Stage 0 consumes microbatch ``t`` at tick ``t``; the last
     stage emits it at tick ``t + S - 1``.
   * ``state``: optional per-microbatch persistent state (KV/SSM caches for
     decode), leaves shaped (num_micro, ...); the pipeline slices microbatch
@@ -39,25 +42,33 @@ from jax import lax
 
 def spmd_pipeline(
     stage_fn: Callable[[Any, Any], tuple[Any, Any]],
-    x: jax.Array,
+    x: Any,
     *,
     stage_axis: str,
     num_stages: int,
     state: Any = None,
     remat: bool = False,
     scatter_dim: int | None = None,
+    reduce: str = "psum",
     vma_refs: tuple = (),
 ):
     """Fill-drain pipeline. Returns (outputs, final_state); ``outputs`` is
-    the last stage's per-microbatch output. With ``scatter_dim=None`` it is
-    psum-broadcast across the stage axis (shaped like ``x``); with
+    the last stage's per-microbatch output. With ``reduce="psum"`` (default)
+    it is psum-broadcast across the stage axis (shaped like ``x``); with
     ``scatter_dim=d`` it is reduce-scattered along that output dim instead —
     cheaper on the wire and it leaves downstream work (LM head, loss)
-    sharded over the stage axis instead of redundantly replicated."""
+    sharded over the stage axis instead of redundantly replicated.
+    ``reduce="none"`` skips the collective entirely: outputs are zero on
+    every stage but the last, so a caller differentiating *inside* the
+    pipeline program can compute a local loss and psum only the gradients —
+    keeping collectives out of the transposed path."""
+    if reduce not in ("psum", "none"):
+        raise ValueError(f"reduce must be 'psum' or 'none', got {reduce!r}")
     stage = lax.axis_index(stage_axis)
     is_first = stage == 0
     is_last = stage == num_stages - 1
-    num_micro = x.shape[0]
+    tree_map = jax.tree_util.tree_map
+    num_micro = jax.tree_util.tree_leaves(x)[0].shape[0]
 
     fn = stage_fn
     if remat:
@@ -69,8 +80,13 @@ def spmd_pipeline(
         mb_idx = jnp.clip(c, 0, num_micro - 1)
         valid = (c >= 0) & (c < num_micro)
 
-        fresh = lax.dynamic_index_in_dim(x, jnp.clip(t, 0, num_micro - 1), 0, keepdims=False)
-        my_in = jnp.where(is_first, fresh, prev_in)
+        fresh = tree_map(
+            lambda a: lax.dynamic_index_in_dim(
+                a, jnp.clip(t, 0, num_micro - 1), 0, keepdims=False
+            ),
+            x,
+        )
+        my_in = tree_map(lambda f, p: jnp.where(is_first, f, p), fresh, prev_in)
 
         st_mb = jax.tree_util.tree_map(
             lambda a: lax.dynamic_index_in_dim(a, mb_idx, 0, keepdims=False), st
@@ -97,7 +113,9 @@ def spmd_pipeline(
 
     from repro.core.vma import match_vma
 
-    prev0 = match_vma(jnp.zeros_like(x[0]), x, vma_refs, extra=(stage_axis,))
+    prev0 = match_vma(
+        tree_map(lambda a: jnp.zeros_like(a[0]), x), x, vma_refs, extra=(stage_axis,)
+    )
     if state is None:
         state = ()
     # append the sacrificial garbage-tick slot (stripped after the scan)
@@ -112,13 +130,18 @@ def spmd_pipeline(
     )
     state = jax.tree_util.tree_map(lambda a: a[:num_micro], state)
     # last stage emitted microbatch m at tick m + S - 1; drop the fill ticks
-    outputs = ys[num_stages - 1 :]
-    outputs = jnp.where(is_last, outputs, jnp.zeros_like(outputs))
+    outputs = tree_map(lambda a: a[num_stages - 1 :], ys)
+    outputs = tree_map(lambda a: jnp.where(is_last, a, jnp.zeros_like(a)), outputs)
+    if reduce == "none":
+        return outputs, state
     if scatter_dim is None:
         outputs = lax.psum(outputs, stage_axis)
     else:
-        outputs = lax.psum_scatter(
-            outputs, stage_axis, scatter_dimension=scatter_dim, tiled=True
+        outputs = tree_map(
+            lambda a: lax.psum_scatter(
+                a, stage_axis, scatter_dimension=scatter_dim, tiled=True
+            ),
+            outputs,
         )
     return outputs, state
 

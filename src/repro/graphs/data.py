@@ -184,6 +184,40 @@ def subgraph(g: GraphBatch, node_idx: np.ndarray, *, keep_halo_edges: bool = Fal
     )
 
 
+def pad_graph(g: GraphBatch, n_pad: int, max_deg: int) -> GraphBatch:
+    """Pad a (sub)graph to exactly ``n_pad`` nodes and ``max_deg`` neighbor
+    slots so chunks of different sizes become one uniform-shape pytree.
+
+    Extra rows are isolated non-nodes: no edge slots (mask False everywhere,
+    so even the self-loop is absent), zero norm, label 0, every split mask
+    False, node_id -1. They contribute nothing to aggregation or loss.
+    Extra neighbor columns are padding slots (mask False, norm 0).
+    """
+    n, w = g.num_nodes, g.max_degree
+    if n_pad < n or max_deg < w:
+        raise ValueError(f"pad target ({n_pad}, {max_deg}) smaller than graph ({n}, {w})")
+    if n_pad == n and max_deg == w:
+        return g
+    dn, dw = n_pad - n, max_deg - w
+
+    def rows(a, fill=0):
+        pad_widths = [(0, dn)] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, pad_widths, constant_values=fill)
+
+    return GraphBatch(
+        features=rows(g.features),
+        neighbors=rows(jnp.pad(g.neighbors, ((0, 0), (0, dw)))),
+        mask=rows(jnp.pad(g.mask, ((0, 0), (0, dw)))),
+        norm=rows(jnp.pad(g.norm, ((0, 0), (0, dw)))),
+        labels=rows(g.labels),
+        train_mask=rows(g.train_mask),
+        val_mask=rows(g.val_mask),
+        test_mask=rows(g.test_mask),
+        node_ids=rows(g.node_ids, fill=-1),
+        num_classes=g.num_classes,
+    )
+
+
 def validate_graph(g: GraphBatch) -> None:
     """Structural invariants (used by tests and the data pipeline)."""
     n, w = g.neighbors.shape

@@ -12,6 +12,8 @@ Veličković et al.: 20 train nodes per class, 500 val, 1000 test.
 
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 from repro.graphs.data import GraphBatch, build_graph_batch
@@ -122,7 +124,10 @@ def load_dataset(
     if name not in DATASETS:
         raise KeyError(f"unknown dataset {name!r}; have {sorted(DATASETS)}")
     n, m, d, c = DATASETS[name]
-    rng = np.random.default_rng(np.random.SeedSequence([hash(name) & 0xFFFF, seed]))
+    # crc32, not hash(): str hashing is salted per process (PYTHONHASHSEED),
+    # which silently made "deterministic" datasets differ between runs
+    name_key = zlib.crc32(name.encode()) & 0xFFFF
+    rng = np.random.default_rng(np.random.SeedSequence([name_key, seed]))
     labels = rng.integers(0, c, size=n).astype(np.int64)
     edges = _planted_edges(rng, labels, m, p_intra)
     feats = _tfidf_features(rng, labels, d)

@@ -72,6 +72,24 @@ def greedy_partition(g: GraphBatch, chunks: int, *, seed: int = 0) -> list[np.nd
     return [np.sort(np.array(p, dtype=np.int64)) for p in parts]
 
 
+def pad_partition(
+    nodes: np.ndarray, core: np.ndarray, n_pad: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad a chunk's (nodes, core_mask) spec to ``n_pad`` entries by repeating
+    node 0 with core_mask False — the padded duplicates lose their edges in
+    ``subgraph()``'s remap and their loss mask is off, so they are inert.
+    Uniform chunk sizes let one jitted step (or one stacked scan) serve every
+    chunk."""
+    extra = n_pad - len(nodes)
+    if extra < 0:
+        raise ValueError(f"chunk of {len(nodes)} nodes exceeds pad target {n_pad}")
+    if extra == 0:
+        return nodes, core
+    nodes = np.concatenate([nodes, np.zeros(extra, dtype=nodes.dtype)])
+    core = np.concatenate([core, np.zeros(extra, dtype=bool)])
+    return nodes, core
+
+
 def expand_halo(g: GraphBatch, core: np.ndarray, hops: int) -> tuple[np.ndarray, np.ndarray]:
     """Return (nodes, core_mask): ``core`` plus its ``hops``-hop neighborhood.
 

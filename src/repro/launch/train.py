@@ -3,18 +3,26 @@
 Two modes:
 
   * ``gnn`` — the paper's experiment: GAT node classification on the
-    citation datasets, single-device or GPipe-pipelined with a chunking
-    strategy (paper-faithful ``sequential`` or beyond-paper ``halo``):
+    citation datasets, single-device or pipelined with a chunking strategy
+    (paper-faithful ``sequential`` or beyond-paper ``halo``) on either
+    engine — ``--engine host`` (torchgpipe-style queue loop, pluggable
+    schedules) or ``--engine compiled`` (one jitted SPMD program):
 
         PYTHONPATH=src python -m repro.launch.train --mode gnn \
             --dataset pubmed --epochs 300 --stages 4 --chunks 4 \
             --strategy sequential --schedule 1f1b
+        PYTHONPATH=src python -m repro.launch.train --mode gnn \
+            --dataset cora --stages 3 --chunks 4 --engine compiled
 
   * ``lm`` — pipelined LM pretraining on the synthetic token stream (any
-    assigned arch; smoke-sized by default so it runs on CPU):
+    assigned arch; smoke-sized by default so it runs on CPU). ``--schedule
+    interleaved`` routes through the circular ``spmd_pipeline_interleaved``
+    (``--pipe-devices`` physical stages, V = stages/devices virtual each):
 
         PYTHONPATH=src python -m repro.launch.train --mode lm \
             --arch mamba2-130m --steps 200 --seq 256 --batch 8
+        PYTHONPATH=src python -m repro.launch.train --mode lm \
+            --arch mamba2-130m --stages 2 --schedule interleaved --steps 50
 """
 
 from __future__ import annotations
@@ -29,14 +37,21 @@ import numpy as np
 
 def run_gnn(args) -> dict:
     from repro.core.microbatch import make_plan
-    from repro.core.pipeline import GPipe, GPipeConfig
+    from repro.core.pipeline import GPipeConfig, make_engine
     from repro.graphs import load_dataset
     from repro.models.gnn.net import build_paper_gat
     from repro.train import optimizer as opt_lib
     from repro.train.loop import make_eval, train
 
     g = load_dataset(args.dataset, seed=args.seed)
-    model = build_paper_gat(g.num_features, g.num_classes, backend=args.backend)
+    gat_kwargs = {}
+    if args.backend == "pallas":
+        # the fused pallas GAT kernel is deterministic; training it with the
+        # paper's attn-dropout would raise in gat_layer — opt out explicitly
+        # and say so, instead of silently zeroing the rate
+        print("[gnn] pallas backend: attention dropout disabled (fused kernel is deterministic)")
+        gat_kwargs["attn_dropout"] = 0.0
+    model = build_paper_gat(g.num_features, g.num_classes, backend=args.backend, **gat_kwargs)
 
     if args.stages <= 1:
         res = train(model, g, epochs=args.epochs, seed=args.seed, log_every=args.log_every)
@@ -51,19 +66,20 @@ def run_gnn(args) -> dict:
         print(out)
         return out
 
-    # GPipe path (paper §6): balance the 6-layer sequential model
+    # pipeline path (paper §6): balance the 6-layer sequential model
     balance = {2: (3, 3), 3: (2, 2, 2), 4: (2, 1, 1, 2), 6: (1, 1, 1, 1, 1, 1)}[args.stages]
     schedule = getattr(args, "schedule", "fill_drain")
+    engine = getattr(args, "engine", "host")
     pipe_devices = getattr(args, "pipe_devices", None)
     if schedule == "interleaved" and pipe_devices is None:
         pipe_devices = 2  # stages -> V = stages/2 virtual stages per device
-    pipe = GPipe(model, GPipeConfig(
+    pipe = make_engine(engine, model, GPipeConfig(
         balance=balance, chunks=args.chunks,
         schedule=schedule, num_devices=pipe_devices,
     ))
     plan = make_plan(g, args.chunks, strategy=args.strategy, halo_hops=2, seed=args.seed)
-    print(f"[gnn] stages={args.stages} chunks={args.chunks} strategy={args.strategy} "
-          f"schedule={schedule} edge_cut={plan.edge_cut:.3f} "
+    print(f"[gnn] engine={engine} stages={args.stages} chunks={args.chunks} "
+          f"strategy={args.strategy} schedule={schedule} edge_cut={plan.edge_cut:.3f} "
           f"rebuild_s={plan.rebuild_seconds:.3f} "
           f"bubble={pipe.describe()['bubble_fraction']:.2f}")
 
@@ -92,6 +108,7 @@ def run_gnn(args) -> dict:
     m = evaluate(params, g)
     out = {
         "mode": f"gpipe-{args.strategy}",
+        "engine": engine,
         "schedule": schedule,
         "chunks": args.chunks,
         "edge_cut": plan.edge_cut,
@@ -117,13 +134,45 @@ def run_lm(args) -> dict:
     cfg = get_arch(args.arch, smoke=not args.full_arch)
     n_dev = jax.device_count()
     stages = args.stages if args.stages > 1 else 1
-    data = max(n_dev // stages, 1)
-    mesh = jax.make_mesh((data, stages), ("data", "model"))
+    schedule = getattr(args, "schedule", "fill_drain")
+    schedule = "fill_drain" if schedule in ("fill_drain", "gpipe") else schedule
+    if schedule not in ("fill_drain", "interleaved"):
+        raise ValueError(
+            f"--mode lm supports fill_drain|interleaved schedules, got {schedule!r} "
+            "(1f1b is a host-GNN-engine schedule)"
+        )
+    if schedule == "interleaved" and stages > 1:
+        # physical stage devices: --pipe-devices, else the largest divisor of
+        # stages that fits the host (V = stages / devices virtual each)
+        pipe_dev = getattr(args, "pipe_devices", None) or max(
+            d for d in range(1, min(n_dev, stages) + 1) if stages % d == 0
+        )
+        if stages % pipe_dev:
+            raise ValueError(f"--pipe-devices {pipe_dev} must divide --stages {stages}")
+        num_virtual = stages // pipe_dev
+    else:
+        schedule, pipe_dev, num_virtual = "fill_drain", stages, 1
+    num_micro = args.chunks
+    if schedule == "interleaved" and num_micro < pipe_dev:
+        num_micro = pipe_dev  # the ring needs C >= devices
+        print(f"[lm] bumping --chunks to {num_micro} (interleaved needs >= --pipe-devices)")
+    data = max(n_dev // pipe_dev, 1)
+    b_local = max(args.batch // data, 1)
+    if b_local % num_micro:
+        raise ValueError(
+            f"micro-batch count {num_micro} must divide the per-device batch "
+            f"{b_local} (--batch {args.batch} over {data} data shards)"
+        )
+    mesh = jax.make_mesh((data, pipe_dev), ("data", "model"))
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
     topo = Topology(
-        num_stages=stages, fsdp_size=data, num_micro=args.chunks,
+        num_stages=stages, fsdp_size=data, num_micro=num_micro,
         loss_chunks=min(4, args.batch),
+        schedule=schedule, num_virtual=num_virtual,
     )
+    if schedule == "interleaved":
+        print(f"[lm] schedule=interleaved stages={stages} devices={pipe_dev} "
+              f"virtual/device={num_virtual} micro={num_micro}")
     art = make_train_step(cfg, topo, shape, mesh, lr=args.lr, dtype=jnp.float32)
     params = init_params(cfg, jax.random.PRNGKey(args.seed), num_stages=stages, dtype=jnp.float32)
     params = jax.device_put(params, art.in_shardings[0])
@@ -170,6 +219,9 @@ def main():
     ap.add_argument("--full-arch", action="store_true", help="use the full (not smoke) config")
     ap.add_argument("--backend", default="padded", choices=["padded", "dense", "pallas"])
     ap.add_argument("--strategy", default="sequential")
+    ap.add_argument("--engine", default="host", choices=["host", "compiled"],
+                    help="gnn pipeline engine: host-driven GPipe queue loop or "
+                         "one compiled SPMD program (shard_map/ppermute)")
     ap.add_argument("--schedule", default="fill_drain",
                     choices=["fill_drain", "gpipe", "1f1b", "interleaved"])
     ap.add_argument("--pipe-devices", type=int, default=None,

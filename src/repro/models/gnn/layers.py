@@ -102,6 +102,15 @@ def gat_layer(
 ) -> jax.Array:
     """Multi-head GAT layer (paper eq. 3–4). Returns (n, heads*out) if concat
     else (n, out) (head average, the paper's prediction layer)."""
+    if backend == "pallas" and attn_dropout > 0.0 and train and rng is not None:
+        # validated up-front, BEFORE any kernel work: the fused
+        # softmax-aggregate kernel cannot apply per-edge dropout inside the
+        # softmax. Eval (train=False) and rate-0 paths are unaffected.
+        raise ValueError(
+            "pallas GAT backend is deterministic and cannot apply attention "
+            f"dropout (attn_dropout={attn_dropout}) during training; set "
+            "attn_dropout=0.0 or use the 'padded'/'dense' backend"
+        )
     heads, _, out_dim = params["w"].shape
     hw = jnp.einsum("nf,hfo->nho", h, params["w"])  # (n, H, F')
     s_src = jnp.einsum("nho,ho->nh", hw, params["a_src"])  # importance of i as dst
@@ -113,10 +122,6 @@ def gat_layer(
         out = gat_aggregate(
             hw, s_src, s_dst, g.neighbors, g.mask, negative_slope=negative_slope
         )
-        if attn_dropout > 0.0 and train and rng is not None:
-            # kernel path folds dropout outside the fused softmax-aggregate:
-            # fall back to reference for stochastic training (documented).
-            raise ValueError("pallas GAT backend is deterministic; disable attn_dropout")
     elif backend == "dense":
         adj = _dense_adj(g)  # (n, n)
         scores = s_src[:, None, :] + s_dst[None, :, :]  # (n, n, H)
@@ -167,15 +172,18 @@ def graph_conv_layer(params: dict, g: GraphBatch, h: jax.Array, *, backend: str 
 # ----------------------------------------------------- GatedGraphConv ----
 
 
-def init_gated_graph_conv(key: jax.Array, dim: int, *, steps: int = 3) -> dict:
-    ks = jax.random.split(key, 4)
+def init_gated_graph_conv(key: jax.Array, dim: int) -> dict:
+    # five independent keys: w_h and u_h previously shared ks[3], making the
+    # GRU candidate's input and recurrent projections identical at init. The
+    # propagation step count is the layer's ``steps`` kwarg (a static trace
+    # constant), not a params entry.
+    ks = jax.random.split(key, 5)
     return {
         "w_msg": glorot(ks[0], (dim, dim)),
         "w_zr": glorot(ks[1], (dim, 2 * dim)),
         "u_zr": glorot(ks[2], (dim, 2 * dim)),
         "w_h": glorot(ks[3], (dim, dim)),
-        "u_h": glorot(ks[3], (dim, dim)),
-        "steps": jnp.array(steps, dtype=jnp.int32),  # static in practice
+        "u_h": glorot(ks[4], (dim, dim)),
     }
 
 

@@ -65,12 +65,15 @@ def _gat_seq_layer(
     backend: str,
 ) -> SeqLayer:
     def apply(p, g, h, rng, train):
+        # attn_dropout passes through unchanged: the pallas backend validates
+        # up-front in gat_layer and raises a clear error instead of this
+        # wrapper silently zeroing the rate (eval / rate-0 paths are fine).
         return L.gat_layer(
             p,
             g,
             h,
             concat=concat,
-            attn_dropout=attn_dropout if backend != "pallas" else 0.0,
+            attn_dropout=attn_dropout,
             rng=rng,
             train=train,
             backend=backend,
@@ -118,6 +121,98 @@ class GNNModel:
 
     def num_params(self, params: list) -> int:
         return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def activation_widths(model: GNNModel, params: list, graph: GraphBatch) -> list[int]:
+    """Feature width at every layer boundary: ``widths[i]`` is the input dim
+    of layer ``i``, ``widths[len(layers)]`` the model output dim. Computed by
+    shape-tracing each layer (no FLOPs), so it works for any SeqLayer mix."""
+    g_struct = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), graph
+    )
+    n = graph.num_nodes
+    h = jax.ShapeDtypeStruct((n, model.in_dim), jnp.float32)
+    widths = [model.in_dim]
+    for layer, p in zip(model.layers, params):
+        h = jax.eval_shape(lambda p_, g_, h_, L=layer: L.apply(p_, g_, h_, None, False), p, g_struct, h)
+        widths.append(h.shape[-1])
+    return widths
+
+
+def travel_width(bounds: list[tuple[int, int]], widths: list[int]) -> int:
+    """Wire width of the traveling activation: the widest *stage-boundary*
+    dim (every stage's output width). The model input width is excluded —
+    stage 0 reads features by chunk id, they never ride the wire."""
+    return max(widths[hi] for _, hi in bounds)
+
+
+def make_gnn_stage(
+    model: GNNModel,
+    params: list,
+    bounds: list[tuple[int, int]],
+    widths: list[int],
+    graph: GraphBatch,
+    rng: jax.Array,
+    *,
+    stage_axis: str,
+    train: bool = True,
+):
+    """Adapter from a sequential GNN to an SPMD pipeline stage for
+    ``repro.core.spmd_pipe.spmd_pipeline``.
+
+    The device's stage index (``lax.axis_index``) selects — via ``lax.switch``
+    — the branch that closes a contiguous ``SeqLayer`` slice ``[lo, hi)`` over
+    its stage params. Because inter-stage activation widths differ (features →
+    hidden → classes), the traveling activation is padded to the widest stage
+    boundary (``travel_width``); each branch slices its true input width and
+    re-pads its output, so every branch has the uniform shape ``ppermute``
+    requires.
+
+    The travel pytree is ``{"h", "chunk"}`` — deliberately minimal. The
+    stacked per-chunk subgraphs (``graph``, leaves (chunks, n_pad, ...)) are
+    closed over as a replicated constant and every branch dynamic-slices its
+    chunk's subgraph by the *traveling chunk id*: the graph rides the
+    pipeline keyed by an int32 scalar instead of re-``ppermute``-ing the
+    neighbor/mask/norm arrays (and the feature matrix) every tick. Stage 0
+    reads its input activation from the sliced chunk's features the same way.
+
+    Per-(chunk, layer) dropout keys are derived from the traveling chunk id
+    exactly as the host engine derives them
+    (``split(fold_in(rng, chunk), n_layers)``), keeping the two engines'
+    stochastic training bitwise-comparable. The key derivation is hoisted
+    out of the ``switch`` into the stage body: branches that consume
+    fold_in/split asymmetrically break ``cond``'s partial-eval when the
+    pipeline is linearized (jax <= 0.4.x), whereas key *use* inside a
+    branch is fine.
+    """
+    n_layers = len(model.layers)
+    d_travel = travel_width(bounds, widths)
+
+    def branch(s: int):
+        lo, hi = bounds[s]
+
+        def apply_slice(operand):
+            travel, rngs = operand
+            c = travel["chunk"]
+            g = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, c, 0, keepdims=False), graph
+            )
+            h = g.features if lo == 0 else travel["h"][:, : widths[lo]]
+            for i in range(lo, hi):
+                h = model.layers[i].apply(params[i], g, h, rngs[i], train)
+            return jnp.pad(h, ((0, 0), (0, d_travel - h.shape[-1])))
+
+        return apply_slice
+
+    branches = [branch(s) for s in range(len(bounds))]
+
+    def stage_fn(travel, state_mb):
+        s = jax.lax.axis_index(stage_axis)
+        rngs = jax.random.split(jax.random.fold_in(rng, travel["chunk"]), n_layers)
+        h_out = jax.lax.switch(s, branches, (travel, rngs))
+        return dict(travel, h=h_out), state_mb
+
+    return stage_fn
 
 
 def build_paper_gat(

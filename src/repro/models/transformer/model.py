@@ -36,9 +36,11 @@ from repro.core import compat
 from repro.configs.base import ArchConfig, ShapeConfig, pipeline_padding
 from repro.core.spmd_pipe import (
     make_gather_fn,
+    make_interleaved_stage,
     make_scanned_stage,
     make_scanned_stage_stateful,
     spmd_pipeline,
+    spmd_pipeline_interleaved,
 )
 from repro.models.transformer import blocks as B
 from repro.models.transformer.common import normal_init, rms_norm, softcap
@@ -48,7 +50,7 @@ from repro.train.losses import softmax_xent
 
 @dataclasses.dataclass(frozen=True)
 class Topology:
-    num_stages: int
+    num_stages: int  # TOTAL pipeline stages (virtual stages when interleaved)
     stage_axis: str = "model"
     fsdp_axis: str = "data"
     pod_axis: str | None = None
@@ -61,6 +63,8 @@ class Topology:
     seq_shard_decode: bool = False  # long_500k: shard KV seq over fsdp axis
     kv_block: int = 512
     loss_chunks: int = 8
+    schedule: str = "fill_drain"  # "fill_drain" | "interleaved"
+    num_virtual: int = 1  # interleaved: V virtual stages per physical device
 
     @property
     def data_axes(self):
@@ -69,6 +73,18 @@ class Topology:
     @property
     def ep_enabled(self) -> bool:
         return self.fsdp_size > 1
+
+    @property
+    def pipe_devices(self) -> int:
+        """Physical devices on the stage axis: num_stages for fill-drain,
+        num_stages / num_virtual for the interleaved (circular) schedule."""
+        if self.schedule != "interleaved":
+            return self.num_stages
+        if self.num_virtual < 1 or self.num_stages % self.num_virtual:
+            raise ValueError(
+                f"num_virtual ({self.num_virtual}) must divide num_stages ({self.num_stages})"
+            )
+        return self.num_stages // self.num_virtual
 
 
 # ------------------------------------------------------------- stacking --
@@ -277,26 +293,47 @@ def lm_head_logits(cfg: ArchConfig, params: dict, y: jax.Array) -> jax.Array:
 # --------------------------------------------------------- stage builders --
 
 
-def _stage_fn_train(cfg, topo, blocks_local, shared, extras_local, gather_mask, positions):
-    gfn = make_gather_fn(gather_mask["blocks"], topo.fsdp_axis) if topo.fsdp_size > 1 else None
-    if cfg.arch_type == "ssm":
-        return make_scanned_stage(
-            lambda lp, ex, h: B.mamba_block_train(cfg, lp, ex, h),
-            blocks_local, extras_local, gather_fn=gfn,
-        )
+def _train_block_fn(cfg, topo, positions):
+    """Homogeneous per-layer train body ``block_fn(lp, ex, h) -> h`` shared by
+    the fill-drain (``make_scanned_stage``) and interleaved
+    (``make_interleaved_stage``) stage builders. Hybrid stacks are
+    heterogeneous and keep their dedicated ``_hybrid_stage``."""
     if cfg.arch_type == "hybrid":
-        return _hybrid_stage(
-            cfg, topo, blocks_local, shared, extras_local, gather_mask, positions,
-            mode="train",
-        )
+        raise NotImplementedError("hybrid stacks have no homogeneous block fn")
+    if cfg.arch_type == "ssm":
+        return lambda lp, ex, h: B.mamba_block_train(cfg, lp, ex, h)
     ep = bool(cfg.num_experts) and topo.ep_enabled
-    block = lambda lp, ex, h: B.block_train(
+    return lambda lp, ex, h: B.block_train(
         cfg, lp, ex, h, positions=positions,
         ep_axis=topo.fsdp_axis if ep else None, ep_size=topo.fsdp_size if ep else 1,
         moe_mode=topo.moe_mode, kv_block=topo.kv_block,
         attn_backend=topo.attn_backend,
     )
+
+
+def _stage_fn_train(cfg, topo, blocks_local, shared, extras_local, gather_mask, positions):
+    gfn = make_gather_fn(gather_mask["blocks"], topo.fsdp_axis) if topo.fsdp_size > 1 else None
+    if cfg.arch_type == "hybrid":
+        return _hybrid_stage(
+            cfg, topo, blocks_local, shared, extras_local, gather_mask, positions,
+            mode="train",
+        )
+    block = _train_block_fn(cfg, topo, positions)
     return make_scanned_stage(block, blocks_local, extras_local, gather_fn=gfn)
+
+
+def _stage_fn_train_interleaved(cfg, topo, blocks_local, extras_local, gather_mask, positions):
+    """Interleaved twin of ``_stage_fn_train``: ``blocks_local`` leaves are
+    (num_virtual, layers_per_stage, ...) — this device's circularly-placed
+    virtual-stage slices."""
+    if cfg.arch_type == "hybrid":
+        raise NotImplementedError(
+            "interleaved schedule requires a homogeneous block stack; "
+            "zamba2-style hybrid stages run fill_drain"
+        )
+    gfn = make_gather_fn(gather_mask["blocks"], topo.fsdp_axis) if topo.fsdp_size > 1 else None
+    block = _train_block_fn(cfg, topo, positions)
+    return make_interleaved_stage(block, blocks_local, extras_local, gather_fn=gfn)
 
 
 def _stage_fn_prefill(cfg, topo, blocks_local, shared, extras_local, gather_mask, positions):
@@ -501,19 +538,49 @@ def make_train_step(
     ex_specs = jax.tree_util.tree_map(lambda a: P(topo.stage_axis, None), extras)
     xspec = P(topo.data_axes, None, None)
 
+    if topo.schedule not in ("fill_drain", "interleaved"):
+        raise ValueError(
+            f"Topology.schedule must be 'fill_drain' or 'interleaved', got {topo.schedule!r}"
+        )
+    interleaved = topo.schedule == "interleaved" and topo.num_stages > 1
+    if interleaved:
+        D, V = topo.pipe_devices, topo.num_virtual
+        if topo.num_micro < D:
+            raise ValueError(
+                f"interleaved schedule needs num_micro ({topo.num_micro}) >= "
+                f"physical stage devices ({D})"
+            )
+        # circular placement: device d hosts virtual stages {v·D + d}; the
+        # stacked (S, per, ...) leaves are row-permuted so the contiguous
+        # V-row shard each device receives under P(stage_axis, ...) is
+        # exactly its virtual-stage slices
+        circ = np.array([v * D + d for d in range(D) for v in range(V)])
+        extras = jax.tree_util.tree_map(lambda a: a[circ], extras)
+
     def loss_fn(params, batch):
         inputs = dict(batch, tokens=batch["tokens"][:, :-1])
         x = embed_inputs(cfg, params, inputs).astype(dtype)
         x = lax.with_sharding_constraint(x, NamedSharding(mesh, xspec))
 
         def pipe_body(blocks, shared, ex, x_local):
+            b_local = x_local.shape[0]
+            x_mb = x_local.reshape(topo.num_micro, b_local // topo.num_micro, seq, -1)
+            if interleaved:
+                # blocks/ex arrive as this device's (V, per, ...) shard
+                stage_fn = _stage_fn_train_interleaved(
+                    cfg, topo, blocks, ex, gather_mask, positions
+                )
+                out = spmd_pipeline_interleaved(
+                    stage_fn, x_mb, stage_axis=topo.stage_axis,
+                    num_devices=D, num_virtual=V, remat=topo.remat,
+                    vma_refs=(blocks, shared),
+                )
+                return out.reshape(b_local, seq, -1)
             blocks_local = jax.tree_util.tree_map(lambda a: a[0], blocks)
             ex_local = jax.tree_util.tree_map(lambda a: a[0], ex)
             stage_fn = _stage_fn_train(
                 cfg, topo, blocks_local, shared, ex_local, gather_mask, positions
             )
-            b_local = x_local.shape[0]
-            x_mb = x_local.reshape(topo.num_micro, b_local // topo.num_micro, seq, -1)
             # reduce-scatter output along seq over the stage axis: the LM
             # head + loss then run stage-sharded instead of 16×-replicated
             out, _ = spmd_pipeline(
@@ -525,13 +592,19 @@ def make_train_step(
 
         shared = params.get("shared_attn", ())
         shared_spec = specs.get("shared_attn", ())
-        yspec = P(topo.data_axes, topo.stage_axis, None)
+        blocks_in = params["blocks"]
+        if interleaved:
+            blocks_in = jax.tree_util.tree_map(lambda a: a[circ], blocks_in)
+            # outputs are psum-broadcast (not seq-scattered) on the ring
+            yspec = P(topo.data_axes, None, None)
+        else:
+            yspec = P(topo.data_axes, topo.stage_axis, None)
         y = compat.shard_map(
             pipe_body,
             mesh=mesh,
             in_specs=(specs["blocks"], shared_spec, ex_specs, xspec),
             out_specs=yspec,
-        )(params["blocks"], shared, extras, x)
+        )(blocks_in, shared, extras, x)
 
         labels, mask = _labels_from_batch(cfg, batch, seq)
         bsz = y.shape[0]

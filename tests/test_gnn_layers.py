@@ -68,6 +68,46 @@ def test_graphconv_and_gated(karate):
     assert np.isfinite(np.asarray(o2)).all()
 
 
+def test_gated_graph_conv_init_keys_independent():
+    """w_h and u_h were both drawn from the same key (GRU candidate's input
+    and recurrent projections started identical); params carry no dead
+    entries — the step count is the apply-time kwarg."""
+    p = L.init_gated_graph_conv(jax.random.PRNGKey(0), 16)
+    assert set(p) == {"w_msg", "w_zr", "u_zr", "w_h", "u_h"}
+    assert not np.allclose(np.asarray(p["w_h"]), np.asarray(p["u_h"]))
+    # every weight pairwise distinct (5 independent subkeys)
+    mats = [np.asarray(p[k]) for k in ("w_msg", "w_h", "u_h")]
+    for i in range(len(mats)):
+        for j in range(i + 1, len(mats)):
+            assert not np.allclose(mats[i], mats[j])
+
+
+def test_pallas_gat_attn_dropout_validates_up_front(karate):
+    """Both entry points fail fast with a clear error when asked to train
+    attention dropout through the deterministic fused kernel; eval and
+    rate-0 paths stay usable."""
+    g = karate
+    rng = jax.random.PRNGKey(0)
+    p = L.init_gat(jax.random.PRNGKey(1), g.num_features, 8, heads=2)
+    # layer path: raises before running the kernel
+    with pytest.raises(ValueError, match="deterministic"):
+        L.gat_layer(p, g, g.features, attn_dropout=0.5, rng=rng, train=True,
+                    backend="pallas")
+    # net path: no silent zeroing — the same clear error surfaces
+    m = build_paper_gat(g.num_features, g.num_classes, backend="pallas")
+    params = m.init_params(jax.random.PRNGKey(2))
+    with pytest.raises(ValueError, match="deterministic"):
+        m.apply(params, g, rng=rng, train=True)
+    # eval path (train=False) is deterministic anyway and must work
+    logp = m.apply(params, g, train=False)
+    assert np.isfinite(np.asarray(logp)).all()
+    # rate-0 training works
+    m0 = build_paper_gat(g.num_features, g.num_classes, backend="pallas", attn_dropout=0.0)
+    p0 = m0.init_params(jax.random.PRNGKey(2))
+    logp = m0.apply(p0, g, rng=rng, train=True)
+    assert np.isfinite(np.asarray(logp)).all()
+
+
 def test_paper_model_shapes(karate):
     g = karate
     m = build_paper_gat(g.num_features, g.num_classes)
