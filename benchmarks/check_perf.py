@@ -1,0 +1,146 @@
+"""CI perf-regression gate over the fig3 engine × schedule table.
+
+Compares a freshly produced ``BENCH_fig3.json`` (``python -m benchmarks.run
+--only fig3 --json-out DIR``) against the committed baseline
+(``benchmarks/BENCH_fig3.json``) and exits non-zero if the compiled engine
+regressed:
+
+  * **speed** — by default each compiled row's step time is NORMALIZED by the
+    same run's host fill-drain step time at the same chunk count, so the
+    gate compares machine-independent ratios: a compiled/host ratio more
+    than ``--threshold`` (default 1.20, i.e. >20%) above the baseline's
+    ratio fails. ``--absolute`` compares raw seconds instead (only
+    meaningful when baseline and current ran on identical hardware);
+  * **coverage** — every compiled row present in the baseline must exist in
+    the current table (a silently vanished row is a regression too);
+  * **memory** — the scheduled executor's 1F1B peak live activations must
+    stay strictly below the fill-drain compiled accounting at every chunk
+    count >= 4 (the schedule-aware engine's headline memory invariant; this
+    check is deterministic, not timing-based).
+
+Intentional regressions (e.g. trading speed for a feature) are overridden by
+applying the ``perf-regression-ok`` label to the PR — the CI job skips the
+gate when the label is present — and committing a refreshed baseline.
+
+    PYTHONPATH=src python -m benchmarks.run --fast --only fig3 --json-out /tmp/bench
+    python -m benchmarks.check_perf --current /tmp/bench/BENCH_fig3.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "BENCH_fig3.json"
+
+
+def _chunks_of(key: str) -> int:
+    return int(key.rsplit("chunks", 1)[1])
+
+
+def normalized_ratios(rows: dict) -> dict[str, float]:
+    """compiled-row step time / same-run host fill-drain step time."""
+    out = {}
+    for key, row in rows.items():
+        if not key.startswith("compiled/"):
+            continue
+        host = rows.get(f"host/fill_drain/chunks{_chunks_of(key)}")
+        if host and host["step_s"] > 0:
+            out[key] = row["step_s"] / host["step_s"]
+    return out
+
+
+def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) -> list[str]:
+    failures: list[str] = []
+    b_rows, c_rows = baseline["rows"], current["rows"]
+
+    for key in sorted(b_rows):
+        if key.startswith("compiled/") and key not in c_rows:
+            failures.append(f"coverage: baseline row {key} missing from current run")
+
+    if absolute:
+        pairs = {
+            k: (b_rows[k]["step_s"], c_rows[k]["step_s"])
+            for k in b_rows
+            if k.startswith("compiled/") and k in c_rows
+        }
+    else:
+        nb, nc = normalized_ratios(b_rows), normalized_ratios(c_rows)
+        pairs = {k: (nb[k], nc[k]) for k in nb if k in nc}
+        # every baseline comparison must still be computable: a current run
+        # missing the host fill-drain normalizer (or the compiled row) for a
+        # baseline key would otherwise shrink the comparison set silently —
+        # in the limit to zero pairs, turning the gate into a no-op pass
+        for k in sorted(set(nb) - set(nc)):
+            failures.append(
+                f"coverage: cannot compare {k} — its row or its host "
+                f"fill_drain normalizer is missing from the current run"
+            )
+    if not pairs:
+        failures.append("coverage: no comparable compiled rows between baseline and current")
+
+    unit = "s" if absolute else "x host"
+    for key in sorted(pairs):
+        base, cur = pairs[key]
+        status = "ok"
+        if cur > base * threshold:
+            status = f"REGRESSED >{(threshold - 1):.0%}"
+            failures.append(
+                f"perf: {key} {cur:.4f}{unit} vs baseline {base:.4f}{unit} "
+                f"(allowed {base * threshold:.4f})"
+            )
+        print(f"  {key:40s} baseline {base:8.4f}{unit}  current {cur:8.4f}{unit}  {status}")
+
+    # memory invariant: scheduled 1F1B strictly below fill-drain accounting
+    for key, row in sorted(c_rows.items()):
+        if not key.startswith("compiled/1f1b/"):
+            continue
+        chunks = _chunks_of(key)
+        if chunks < 4:
+            continue
+        fd = c_rows.get(f"compiled/fill_drain/chunks{chunks}")
+        peak = row.get("peak_live")
+        fd_peak = fd and fd.get("peak_live_accounted")
+        if peak is None or fd_peak is None:
+            failures.append(f"memory: {key} peak-live accounting missing")
+        elif not peak < fd_peak:
+            failures.append(
+                f"memory: {key} peak_live {peak} not strictly below "
+                f"fill-drain accounting {fd_peak}"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--threshold", type=float, default=1.20,
+                    help="max allowed current/baseline slowdown factor (1.20 = +20%%)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="compare raw seconds instead of host-normalized ratios")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    print(f"perf gate: baseline={args.baseline} threshold={args.threshold:.2f} "
+          f"mode={'absolute' if args.absolute else 'host-normalized'}")
+    failures = check(baseline, current, threshold=args.threshold, absolute=args.absolute)
+    if failures:
+        print("\nPERF GATE FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        print("(intentional? apply the 'perf-regression-ok' PR label and "
+              "commit a refreshed benchmarks/BENCH_fig3.json)")
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,17 +3,23 @@
 The paper's slowdown comes from per-chunk sub-graph rebuilds; we report
 epoch time AND the isolated rebuild cost so the overhead source is explicit.
 
-Beyond-paper: every chunk count also runs under each pipeline schedule
-(fill-drain / 1F1B / interleaved where legal), emitting the schedule's
-bubble fraction and measured peak live activations next to the epoch time —
-the schedule-comparison columns for the ROADMAP's speed axis. The
-``compiled`` rows rerun fill-drain on the compiled SPMD engine (one jitted
-program instead of the host queue loop) so engine regressions show up in
-the same perf table; ``compiled_vs_host`` reports the speedup directly.
+Beyond-paper: every chunk count runs the full engine × schedule matrix —
+host (fill-drain / 1F1B / interleaved where legal) and compiled, where
+fill-drain runs the fused scan and 1F1B/interleaved run the scheduled
+executor (``spmd_pipeline_scheduled``) inside the same jitted program. Each
+row carries the schedule's bubble fraction and peak live activations
+(measured on the host engine, static stash accounting on the scheduled
+compiled path) next to the epoch time; ``compiled_vs_host`` reports the
+speedup against the host fill-drain baseline of the same chunk count.
+
+``json_path`` writes the whole table as machine-readable ``BENCH_fig3.json``
+— the artifact the CI perf-regression gate (``benchmarks/check_perf.py``)
+diffs against the committed baseline.
 """
 
 from __future__ import annotations
 
+import json
 import types
 
 from benchmarks.common import emit
@@ -22,48 +28,58 @@ from repro.graphs import load_dataset
 from repro.launch.train import run_gnn
 
 SCHEDULES = ("fill_drain", "1f1b", "interleaved")
+ENGINES = ("host", "compiled")
 
 
-def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES):
+def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES, json_path=None):
     g = load_dataset(dataset)
     rows = []
     stages, pipe_devices = 4, 2
+    bench = {
+        "dataset": dataset,
+        "stages": stages,
+        "pipe_devices": pipe_devices,
+        "epochs": epochs,
+        "rows": {},
+    }
     for chunks in range(1, max_chunks + 1):
         plan = make_plan(g, chunks, strategy="sequential")
         host_epoch_s = None
-        for schedule in schedules:
-            args = types.SimpleNamespace(
-                mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
-                stages=stages, chunks=chunks, epochs=epochs, seed=0, log_every=0,
-                schedule=schedule, pipe_devices=pipe_devices, engine="host",
-            )
-            try:
-                r = run_gnn(args)
-            except ValueError:
-                continue  # schedule rejects this (stages, chunks) combo
-            if schedule == "fill_drain":
-                host_epoch_s = r["avg_epoch_s"]
-            emit(
-                f"fig3/{dataset}/{schedule}_chunks{chunks}",
-                r["avg_epoch_s"] * 1e6,
-                f"rebuild_s={plan.rebuild_seconds:.3f};edge_cut={plan.edge_cut:.3f};"
-                f"bubble={r['bubble_fraction']:.3f};"
-                f"peak_live={r['peak_live_activations']}",
-            )
-            rows.append((schedule, chunks, r["avg_epoch_s"], plan.rebuild_seconds))
-        # compiled-engine smoke: same plan/seed, fill-drain, one fused program
-        args = types.SimpleNamespace(
-            mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
-            stages=stages, chunks=chunks, epochs=epochs, seed=0, log_every=0,
-            schedule="fill_drain", pipe_devices=None, engine="compiled",
-        )
-        r = run_gnn(args)
-        speedup = host_epoch_s / r["avg_epoch_s"] if host_epoch_s else float("nan")
-        emit(
-            f"fig3/{dataset}/compiled_chunks{chunks}",
-            r["avg_epoch_s"] * 1e6,
-            f"rebuild_s={plan.rebuild_seconds:.3f};edge_cut={plan.edge_cut:.3f};"
-            f"compiled_vs_host={speedup:.2f}x",
-        )
-        rows.append(("compiled", chunks, r["avg_epoch_s"], plan.rebuild_seconds))
+        for engine in ENGINES:
+            for schedule in schedules:
+                args = types.SimpleNamespace(
+                    mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
+                    stages=stages, chunks=chunks, epochs=epochs, seed=0, log_every=0,
+                    schedule=schedule, pipe_devices=pipe_devices, engine=engine,
+                )
+                try:
+                    r = run_gnn(args)
+                except ValueError:
+                    continue  # schedule rejects this (stages, chunks) combo
+                if engine == "host" and schedule == "fill_drain":
+                    host_epoch_s = r["avg_epoch_s"]
+                name = (
+                    f"{schedule}_chunks{chunks}" if engine == "host"
+                    else f"compiled_{schedule}_chunks{chunks}"
+                )
+                derived = (
+                    f"rebuild_s={plan.rebuild_seconds:.3f};edge_cut={plan.edge_cut:.3f};"
+                    f"bubble={r['bubble_fraction']:.3f};"
+                    f"peak_live={r['peak_live_activations']}"
+                )
+                if engine == "compiled" and host_epoch_s:
+                    derived += f";compiled_vs_host={host_epoch_s / r['avg_epoch_s']:.2f}x"
+                emit(f"fig3/{dataset}/{name}", r["avg_epoch_s"] * 1e6, derived)
+                bench["rows"][f"{engine}/{schedule}/chunks{chunks}"] = {
+                    "step_s": r["avg_epoch_s"],
+                    "bubble": r["bubble_fraction"],
+                    "peak_live": r["peak_live_activations"],
+                    "peak_live_accounted": r["peak_live_accounted"],
+                    "rebuild_s": plan.rebuild_seconds,
+                }
+                rows.append((f"{engine}/{schedule}", chunks, r["avg_epoch_s"], plan.rebuild_seconds))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
+            f.write("\n")
     return rows

@@ -8,6 +8,7 @@
 """
 
 import argparse
+import os
 import sys
 
 
@@ -17,6 +18,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper protocol: 300 epochs + pubmed")
     ap.add_argument("--dataset", default="cora")
     ap.add_argument("--only", default=None, help="comma list: table1,table2,fig3,fig4,kernels,roofline")
+    ap.add_argument("--json-out", default=None,
+                    help="directory for machine-readable outputs (BENCH_fig3.json, "
+                         "consumed by benchmarks.check_perf)")
     args = ap.parse_args()
 
     epochs = 300 if args.full else (15 if args.fast else 60)
@@ -39,7 +43,11 @@ def main() -> None:
     if want("fig3"):
         from benchmarks import fig3
 
-        fig3.run(dataset=dataset, epochs=max(epochs // 2, 10))
+        json_path = None
+        if args.json_out:
+            os.makedirs(args.json_out, exist_ok=True)
+            json_path = os.path.join(args.json_out, "BENCH_fig3.json")
+        fig3.run(dataset=dataset, epochs=max(epochs // 2, 10), json_path=json_path)
     if want("fig4"):
         from benchmarks import fig4
 

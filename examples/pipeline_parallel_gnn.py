@@ -60,6 +60,9 @@ def main():
     halo_il = run_gnn(cfg(stages=4, chunks=4, strategy="halo", schedule="interleaved"))
     print("== same halo config on the COMPILED engine (one jitted program) ==")
     halo_c = run_gnn(cfg(stages=4, chunks=4, strategy="halo", engine="compiled"))
+    print("== ... and 1F1B INSIDE the compiled program (scheduled executor) ==")
+    halo_c1 = run_gnn(cfg(stages=4, chunks=4, strategy="halo", engine="compiled",
+                          schedule="1f1b"))
 
     print("\nsummary (val accuracy):")
     print(f"  full batch               {full['val_acc']:.3f}")
@@ -71,6 +74,9 @@ def main():
           f"bubble {halo_il['bubble_fraction']:.3f} vs {halo['bubble_fraction']:.3f}")
     print(f"  compiled engine (halo)   {halo_c['val_acc']:.3f}   "
           f"epoch {halo_c['avg_epoch_s']*1e3:.0f}ms vs host {halo['avg_epoch_s']*1e3:.0f}ms")
+    print(f"  compiled halo / 1f1b     {halo_c1['val_acc']:.3f}   "
+          f"peak_live {halo_c1['peak_live_activations']} "
+          f"(stash accounting) vs fill-drain {4 * 4}")
     print_schedule_matrix()
 
 

@@ -52,9 +52,19 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
 from repro.core.microbatch import MicroBatchPlan
-from repro.core.schedule import get_schedule
-from repro.core.spmd_pipe import spmd_pipeline
-from repro.models.gnn.net import GNNModel, activation_widths, make_gnn_stage, travel_width
+from repro.core.schedule import get_schedule, lower_timeline
+from repro.core.spmd_pipe import (
+    spmd_pipeline,
+    spmd_pipeline_scheduled,
+    spmd_pipeline_scheduled_lanes,
+)
+from repro.models.gnn.net import (
+    GNNModel,
+    activation_widths,
+    make_gnn_stage,
+    make_gnn_stage_slices,
+    travel_width,
+)
 from repro.train import optimizer as opt_lib
 
 
@@ -345,22 +355,36 @@ class CompiledGNNPipeline(PipelineEngine):
         is what makes ``--engine compiled`` meaningful on a laptop: one jit
         dispatch per step instead of 2·S·C.
 
-    The compiled engine executes the fill-drain schedule; 1F1B/interleaved
-    remain host-engine features (the update is schedule-invariant anyway).
+    The engine is schedule-aware (``config.schedule``): fill-drain routes to
+    the executors above (AD through scan/ppermute, unchanged numerics);
+    1F1B and interleaved-1F1B lower their ``WorkItem`` timeline to static
+    per-tick index arrays (``repro.core.schedule.lower_timeline``) and run
+    through ``spmd_pipeline_scheduled`` — mixed fwd/bwd ticks with explicit
+    ``jax.vjp`` backward stages (no AD through the scan, so no per-tick
+    residual buffers) and an activation stash sized to the schedule's live
+    window (1F1B's min(S-s, C)) instead of the fill-drain S·C. Per-chunk
+    gradients are reduced in the canonical descending-chunk order after the
+    scan, so every schedule×engine combination stays bit-identical to the
+    host fill-drain baseline. With fewer devices than the schedule's
+    placement needs, the same work dispatcher runs through
+    ``spmd_pipeline_scheduled_lanes`` — the ring as a lane axis inside one
+    program, a static lane loop keeping every ``lax.switch`` a real
+    single-branch conditional (a ``vmap(axis_name=...)`` emulation would
+    batch the predicate and compute all 2S+1 branches per lane).
     """
 
     name = "compiled"
 
     def __init__(self, model: GNNModel, config: GPipeConfig):
-        if config.schedule not in ("fill_drain", "gpipe"):
-            raise ValueError(
-                f"compiled engine executes the fill-drain schedule, not {config.schedule!r} "
-                "(updates are schedule-invariant; use --engine host for 1f1b/interleaved)"
-            )
         super().__init__(model, config)
         self._widths: list[int] | None = None
         self._steps: dict = {}
         self._travel_cache: dict = {}
+        self._lowered: dict = {}  # chunks -> LoweredTimeline (scheduled path)
+
+    @property
+    def _fill_drain(self) -> bool:
+        return self.config.schedule in ("fill_drain", "gpipe")
 
     # ------------------------------------------------------------ program --
 
@@ -443,6 +467,121 @@ class CompiledGNNPipeline(PipelineEngine):
 
         return jax.jit(step)
 
+    def _make_work_fn(self, widths: list[int], params, graph, labels, m, rng):
+        """The per-tick work dispatcher for ``spmd_pipeline_scheduled``: one
+        ``lax.switch`` over 1 + 2·S branches (idle, fwd per stage, bwd per
+        stage). Backward branches are explicit ``jax.vjp``s of the
+        params-explicit stage slices — differentiating wrt the FULL params
+        list yields a full-shaped gradient pytree with zeros outside the
+        stage's layers, which is exactly what the canonical cross-stage psum
+        reduction needs. The last stage derives its cotangent from the same
+        summed masked-NLL the host engine differentiates
+        (``_chunk_loss_sum``), so the loss trajectory matches chunk for
+        chunk."""
+        S = self.config.num_stages
+        model = self.model
+        slices = make_gnn_stage_slices(
+            model, self._bounds, widths, graph, rng, train=True
+        )
+        d_travel = travel_width(self._bounds, widths)
+        n_pad = graph.features.shape[1]
+        zero_wire = jnp.zeros((n_pad, d_travel), graph.features.dtype)
+        zero = jnp.zeros((), jnp.float32)
+
+        def zeros_grads():
+            return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+        def idle(operand):
+            return zero_wire, zero_wire, zeros_grads(), zero, zero
+
+        def fwd(s):
+            def branch(operand):
+                chunk, h_in, _ct = operand
+                return slices[s](params, chunk, h_in), zero_wire, zeros_grads(), zero, zero
+
+            return branch
+
+        def bwd(s):
+            last = s == S - 1
+
+            def branch(operand):
+                chunk, h_in, ct = operand
+
+                def f(p, h):
+                    return slices[s](p, chunk, h)
+
+                y, vjp = jax.vjp(f, params, h_in)
+                if last:
+                    logp = y[:, : model.out_dim]
+                    (loss_sum, count), d_logp = jax.value_and_grad(
+                        _chunk_loss_sum, argnums=0, has_aux=True
+                    )(logp, labels[chunk], m[chunk])
+                    ct = jnp.pad(d_logp, ((0, 0), (0, d_travel - d_logp.shape[-1])))
+                else:
+                    loss_sum = count = zero
+                d_params, d_h = vjp(ct)
+                return zero_wire, d_h, d_params, loss_sum, count
+
+            return branch
+
+        branches = [idle] + [fwd(s) for s in range(S)] + [bwd(s) for s in range(S)]
+
+        def work_fn(phase, stage, chunk, h_in, ct):
+            # idle -> 0, fwd(s) -> 1 + s, bwd(s) -> 1 + S + s
+            index = jnp.where(phase == 0, 0, (phase - 1) * S + stage + 1)
+            return lax.switch(index, branches, (chunk, h_in, ct))
+
+        return work_fn
+
+    def _build_step_scheduled(
+        self, widths: list[int], chunks: int, optimizer: opt_lib.Optimizer
+    ):
+        """One jitted train step executing the configured 1F1B/interleaved
+        timeline: shard_map over the schedule's device count when the host
+        has enough devices, else the lane-stacked substrate of the same
+        dataflow (``spmd_pipeline_scheduled_lanes``)."""
+        S = self.config.num_stages
+        timeline = self.schedule.timeline(S, chunks)  # raises on bad (S, C)
+        lowered = lower_timeline(timeline, S, chunks)
+        self._lowered[chunks] = lowered
+        D = lowered.num_devices
+        d_travel = travel_width(self._bounds, widths)
+
+        spmd = jax.device_count() >= D
+
+        def local(params, graph, labels, m, rng):
+            work_fn = self._make_work_fn(widths, params, graph, labels, m, rng)
+            wire_like = jnp.zeros(
+                (graph.features.shape[1], d_travel), graph.features.dtype
+            )
+            if spmd:
+                return spmd_pipeline_scheduled(
+                    work_fn, lowered, stage_axis="stage",
+                    wire_like=wire_like, grads_like=params,
+                )
+            return spmd_pipeline_scheduled_lanes(
+                work_fn, lowered, wire_like=wire_like, grads_like=params
+            )
+
+        if spmd:
+            mesh = jax.sharding.Mesh(np.array(jax.devices()[:D]), ("stage",))
+            mapped = compat.shard_map(
+                local, mesh=mesh, in_specs=(P(),) * 5, out_specs=P()
+            )
+        else:
+            mapped = local
+
+        def step(params, opt_state, graph, labels, loss_mask, rng):
+            m = loss_mask.astype(jnp.float32)
+            grads, loss_sum, count = mapped(params, graph, labels, m, rng)
+            scale = 1.0 / jnp.maximum(count, 1.0)
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            params = opt_lib.apply_updates(params, updates)
+            return params, opt_state, loss_sum / jnp.maximum(count, 1.0)
+
+        return jax.jit(step)
+
     def _travel_inputs(self, stacked):
         """(travel pytree, loss_mask) for one stacked plan, cached. Only the
         activation buffer and the chunk id travel the wire; the stacked
@@ -490,15 +629,35 @@ class CompiledGNNPipeline(PipelineEngine):
         entry = self._steps.get(key)
         if entry is not None and entry[0] is optimizer:
             step = entry[1]
-        else:
+        elif self._fill_drain:
             step = self._build_step(self._widths, optimizer)
             self._steps[key] = (optimizer, step)
-        travel, loss_mask = self._travel_inputs(stacked)
+        else:
+            step = self._build_step_scheduled(self._widths, stacked.chunks, optimizer)
+            self._steps[key] = (optimizer, step)
+        if self._fill_drain:
+            travel, loss_mask = self._travel_inputs(stacked)
+        else:
+            loss_mask = stacked.graph.train_mask & stacked.core_mask
         if stats is not None:
             stats.update(self.describe())
-            stats["measured_peak_live_activations"] = None  # fused: not observable
+            if self._fill_drain:
+                # fused fill-drain scan: every stage banks all C outputs
+                stats["measured_peak_live_activations"] = None  # not observable
+            else:
+                lowered = self._lowered[stacked.chunks]
+                # static accounting of the scheduled executor's stash: max
+                # simultaneously banked stage inputs (stage-0 inputs are read
+                # from the replicated feature table, never stashed)
+                stats["measured_peak_live_activations"] = lowered.peak_live_stash
+                stats["stash_slots_per_device"] = lowered.n_fslots
+        if self._fill_drain:
+            return step(
+                params, opt_state, travel, stacked.graph, stacked.graph.labels,
+                loss_mask, rng,
+            )
         return step(
-            params, opt_state, travel, stacked.graph, stacked.graph.labels, loss_mask, rng
+            params, opt_state, stacked.graph, stacked.graph.labels, loss_mask, rng
         )
 
 

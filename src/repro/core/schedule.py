@@ -35,6 +35,9 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import heapq
+
+import numpy as np
 
 # ----------------------------------------------------------------- items --
 
@@ -68,7 +71,13 @@ def validate_timeline(
     * no device runs two items in the same tick;
     * fwd(s, c) strictly after fwd(s-1, c);
     * bwd(s, c) strictly after bwd(s+1, c), and after fwd(S-1, c) at the
-      last stage — so a chunk's bwd never precedes its fwd anywhere.
+      last stage;
+    * bwd(s, c) strictly after fwd(s, c) at EVERY stage, and strictly after
+      fwd(s+1, c) — a chunk's backward can only start once its forward has
+      cleared the stage whose cotangent it consumes. (For a complete
+      timeline these follow from the chained checks above, but they are
+      asserted directly so a violation is reported at the offending item
+      instead of surfacing as a far-away chain inconsistency.)
     """
     S, C = num_stages, num_chunks
     seen: dict[tuple[int, int, str], int] = {}
@@ -87,6 +96,14 @@ def validate_timeline(
         assert seen[(S - 1, c, "bwd")] > seen[(S - 1, c, "fwd")], (c, "loss dep")
         for s in range(S - 1):
             assert seen[(s, c, "bwd")] > seen[(s + 1, c, "bwd")], (s, c, "bwd dep")
+        # direct cross-phase checks: bwd(s, c) after its own fwd AND after
+        # the downstream fwd whose cotangent it consumes
+        for s in range(S):
+            assert seen[(s, c, "bwd")] > seen[(s, c, "fwd")], (s, c, "bwd before own fwd")
+        for s in range(S - 1):
+            assert seen[(s, c, "bwd")] > seen[(s + 1, c, "fwd")], (
+                s, c, "bwd before fwd of next stage",
+            )
 
 
 def peak_live_activations(items: list[WorkItem]) -> int:
@@ -102,6 +119,199 @@ def peak_live_activations(items: list[WorkItem]) -> int:
         else:
             live -= 1
     return peak
+
+
+# ------------------------------------------ timeline -> index arrays --
+
+PHASE_IDLE, PHASE_FWD, PHASE_BWD = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredTimeline:
+    """A ``WorkItem`` timeline compiled to dense per-tick index arrays — the
+    static program the schedule-aware compiled executor
+    (``repro.core.spmd_pipe.spmd_pipeline_scheduled``) scans over.
+
+    Every array is (num_ticks, num_devices) int32; device d reads its column
+    each tick:
+
+      * ``phase``      — PHASE_IDLE / PHASE_FWD / PHASE_BWD;
+      * ``stage``      — the (virtual) stage the work item runs (0 when idle);
+      * ``chunk``      — the item's microbatch (0 when idle);
+      * ``work_fslot`` — activation-stash slot holding this item's *stage
+        input*: a fwd reads its banked input there, a bwd re-materializes
+        from it.  ``n_fslots`` (the sacrificial slot) for stage-0 items,
+        whose input is read from the chunk's features instead, and when idle;
+      * ``in_fslot``   — where to bank the forward-wire value arriving this
+        tick (the upstream stage's output, one ``ppermute`` hop old);
+        sacrificial when the arriving value is fill/drain garbage;
+      * ``work_bslot`` — cotangent-stash slot a bwd reads; sacrificial for
+        the last stage (its cotangent comes from the loss) and non-bwd ticks;
+      * ``in_bslot``   — where to bank the backward-wire value arriving this
+        tick; sacrificial for garbage.
+
+    Slots are assigned by a free-list simulation over the timeline, so
+    ``n_fslots`` is the schedule's real per-device activation window (1F1B's
+    min(S-s, C) memory lever) rather than the fill-drain C — plus the wire
+    slack between an activation's arrival and the tick its fwd consumes it.
+    ``peak_live_stash`` is the max number of simultaneously banked stage
+    inputs summed across devices (the compiled analogue of the host engine's
+    measured ``len(saved)`` peak, minus stage-0 inputs which are never
+    stashed — they are read from the replicated feature table by chunk id).
+    """
+
+    num_stages: int
+    num_chunks: int
+    num_devices: int
+    num_ticks: int
+    phase: np.ndarray
+    stage: np.ndarray
+    chunk: np.ndarray
+    work_fslot: np.ndarray
+    in_fslot: np.ndarray
+    work_bslot: np.ndarray
+    in_bslot: np.ndarray
+    n_fslots: int
+    n_bslots: int
+    peak_live_stash: int
+
+
+def _alloc_slots(entries):
+    """Free-list slot allocation for [arrival, release] tick intervals.
+
+    ``entries`` is a list of (arrival, release, key); a slot freed at tick t
+    is reusable from t + 1 (the executor banks arrivals *before* the tick's
+    read, so same-tick reuse would clobber an unread value). Returns
+    (slot_of_key, n_slots)."""
+    slot_of: dict = {}
+    n_slots = 0
+    free: list[int] = []
+    active: list[tuple[int, int]] = []  # (release, slot) min-heap
+    for arrival, release, key in sorted(entries):
+        while active and active[0][0] < arrival:
+            heapq.heappush(free, heapq.heappop(active)[1])
+        if free:
+            slot = heapq.heappop(free)
+        else:
+            slot = n_slots
+            n_slots += 1
+        slot_of[key] = slot
+        heapq.heappush(active, (release, slot))
+    return slot_of, n_slots
+
+
+def lower_timeline(
+    items: list[WorkItem], num_stages: int, num_chunks: int
+) -> LoweredTimeline:
+    """Lower a validated timeline to the per-tick index arrays of
+    ``LoweredTimeline``.
+
+    Static validation beyond ``validate_timeline``: the device placement must
+    be ring-compatible — stage s+1 must sit one ``ppermute`` hop downstream
+    of stage s (device_of(s+1) == (device_of(s) + 1) % D) so a single
+    forward ring (and its transpose for cotangents) carries every edge of
+    the pipeline DAG. All shipped schedules (fill-drain, 1F1B, interleaved
+    round-robin placement) satisfy this; a custom placement that does not
+    raises ``ValueError`` here instead of silently mis-routing activations.
+    """
+    validate_timeline(items, num_stages, num_chunks)
+    S, C = num_stages, num_chunks
+
+    dev_of: dict[int, int] = {}
+    for it in items:
+        if dev_of.setdefault(it.stage, it.device) != it.device:
+            raise ValueError(f"stage {it.stage} placed on two devices")
+    D = max(dev_of.values()) + 1
+    for s in range(S - 1):
+        if dev_of[s + 1] != (dev_of[s] + 1) % D:
+            raise ValueError(
+                f"placement is not ring-compatible: stage {s + 1} on device "
+                f"{dev_of[s + 1]}, expected {(dev_of[s] + 1) % D} (one hop "
+                f"after stage {s} on device {dev_of[s]})"
+            )
+
+    t_f: dict[tuple[int, int], int] = {}
+    t_b: dict[tuple[int, int], int] = {}
+    for it in items:
+        (t_f if it.phase == "fwd" else t_b)[(it.stage, it.chunk)] = it.tick
+    T = max(it.tick for it in items) + 1
+
+    # forward stash: stage s >= 1's input for chunk c is banked on arrival
+    # (one tick after fwd(s-1, c) put it on the wire) and freed once
+    # bwd(s, c) has re-materialized from it
+    f_entries: dict[int, list] = {d: [] for d in range(D)}
+    b_entries: dict[int, list] = {d: [] for d in range(D)}
+    for c in range(C):
+        for s in range(1, S):
+            f_entries[dev_of[s]].append((t_f[(s - 1, c)] + 1, t_b[(s, c)], (s, c)))
+        for s in range(S - 1):
+            # cotangent of stage s's output: produced by bwd(s+1, c), read
+            # (and freed) by bwd(s, c)
+            b_entries[dev_of[s]].append((t_b[(s + 1, c)] + 1, t_b[(s, c)], (s, c)))
+
+    f_slot: dict[tuple[int, int], int] = {}
+    b_slot: dict[tuple[int, int], int] = {}
+    n_fslots = n_bslots = 0
+    for d in range(D):
+        arrivals = {a for a, _, _ in f_entries[d]}
+        if len(arrivals) != len(f_entries[d]):
+            raise ValueError(f"two forward-wire values arrive at device {d} in one tick")
+        arrivals = {a for a, _, _ in b_entries[d]}
+        if len(arrivals) != len(b_entries[d]):
+            raise ValueError(f"two backward-wire values arrive at device {d} in one tick")
+        slots, n = _alloc_slots(f_entries[d])
+        f_slot.update(slots)
+        n_fslots = max(n_fslots, n)
+        slots, n = _alloc_slots(b_entries[d])
+        b_slot.update(slots)
+        n_bslots = max(n_bslots, n)
+
+    phase = np.full((T, D), PHASE_IDLE, dtype=np.int32)
+    stage = np.zeros((T, D), dtype=np.int32)
+    chunk = np.zeros((T, D), dtype=np.int32)
+    work_fslot = np.full((T, D), n_fslots, dtype=np.int32)
+    in_fslot = np.full((T, D), n_fslots, dtype=np.int32)
+    work_bslot = np.full((T, D), n_bslots, dtype=np.int32)
+    in_bslot = np.full((T, D), n_bslots, dtype=np.int32)
+
+    for it in items:
+        phase[it.tick, it.device] = PHASE_FWD if it.phase == "fwd" else PHASE_BWD
+        stage[it.tick, it.device] = it.stage
+        chunk[it.tick, it.device] = it.chunk
+        if it.stage > 0:
+            work_fslot[it.tick, it.device] = f_slot[(it.stage, it.chunk)]
+        if it.phase == "bwd" and it.stage < S - 1:
+            work_bslot[it.tick, it.device] = b_slot[(it.stage, it.chunk)]
+    for d in range(D):
+        for arrival, _, (s, c) in f_entries[d]:
+            in_fslot[arrival, d] = f_slot[(s, c)]
+        for arrival, _, (s, c) in b_entries[d]:
+            in_bslot[arrival, d] = b_slot[(s, c)]
+
+    # true peak: max simultaneously banked stage inputs across all devices
+    delta = np.zeros(T + 2, dtype=np.int64)
+    for d in range(D):
+        for arrival, release, _ in f_entries[d]:
+            delta[arrival] += 1
+            delta[release + 1] -= 1
+    peak = int(np.cumsum(delta).max()) if T else 0
+
+    return LoweredTimeline(
+        num_stages=S,
+        num_chunks=C,
+        num_devices=D,
+        num_ticks=T,
+        phase=phase,
+        stage=stage,
+        chunk=chunk,
+        work_fslot=work_fslot,
+        in_fslot=in_fslot,
+        work_bslot=work_bslot,
+        in_bslot=in_bslot,
+        n_fslots=n_fslots,
+        n_bslots=n_bslots,
+        peak_live_stash=peak,
+    )
 
 
 # ------------------------------------------------------- list scheduler --

@@ -3,10 +3,14 @@
 This is the production-mesh generalization of the paper's technique: the
 host-driven torchgpipe queue schedule becomes a single compiled program —
 one `lax.scan` tick per pipeline slot, `lax.ppermute` moving activations
-stage→stage over the mesh's ``stage_axis``. Two schedules ship:
-``spmd_pipeline`` (GPipe fill-drain, one stage per device) and
-``spmd_pipeline_interleaved`` (circular placement, V virtual stages per
-device — the bubble shrinks by ~V; see ``repro.core.schedule``).
+stage→stage over the mesh's ``stage_axis``. Three executors ship:
+``spmd_pipeline`` (GPipe fill-drain, one stage per device, AD through the
+scan), ``spmd_pipeline_interleaved`` (circular placement, V virtual stages
+per device — the bubble shrinks by ~V; see ``repro.core.schedule``), and
+``spmd_pipeline_scheduled`` (any validated ``WorkItem`` timeline — 1F1B /
+interleaved 1F1B — lowered to static per-tick index arrays, mixed fwd/bwd
+ticks with explicit ``jax.vjp`` backward stages and an activation stash
+sized to the schedule's live window instead of S·C).
 
 Contract (everything below happens *inside* shard_map):
 
@@ -225,6 +229,209 @@ def spmd_pipeline_interleaved(
     outputs = ys[(V - 1) * C + D - 1 :]
     outputs = jnp.where(is_last, outputs, jnp.zeros_like(outputs))
     return lax.psum(outputs, stage_axis)
+
+
+def spmd_pipeline_scheduled(
+    work_fn: Callable[..., tuple],
+    lowered,
+    *,
+    stage_axis: str,
+    wire_like: jax.Array,
+    grads_like: Any,
+    vma_refs: tuple = (),
+):
+    """Schedule-aware pipeline executor: runs an arbitrary (validated,
+    ring-compatible) ``WorkItem`` timeline — 1F1B, interleaved 1F1B, or any
+    mixed fwd/bwd order — as one ``lax.scan`` over ticks inside the compiled
+    program, with explicit backward stages instead of AD through the scan.
+
+    ``lowered`` is a ``repro.core.schedule.LoweredTimeline``: static per-tick
+    ``(phase, stage, chunk, slot)`` index arrays baked into the program as
+    constants; each device reads its column via ``lax.axis_index``.
+
+    ``work_fn(phase, stage, chunk, h_in, ct) -> (y, d_h, grads, loss_sum,
+    count)`` executes one work item (all five args traced scalars/arrays):
+
+      * fwd: ``y`` is the stage output (uniform wire shape); everything else
+        must be zeros;
+      * bwd: ``d_h`` is the cotangent for the upstream stage's output and
+        ``grads`` this item's parameter gradients (full-params pytree, zero
+        outside the stage's layers — a ``jax.vjp`` of the stage wrt the full
+        params gives exactly that). The LAST stage derives its own cotangent
+        from the loss and reports (loss_sum, count); other stages consume
+        the banked ``ct`` and report zeros;
+      * idle: all-zeros.
+
+    Dataflow per tick: bank the two arriving wire values (forward ring hop
+    carries activations, its transpose carries cotangents) into the stash
+    slots the lowering assigned, read the work item's input/cotangent slots,
+    run ``work_fn``, accumulate ``grads`` into the item's *per-chunk* slot,
+    and ``ppermute`` the outputs. Fill/drain garbage routes to sacrificial
+    slots — the same trick as ``spmd_pipeline``'s state writes.
+
+    The activation stash holds ``n_fslots`` slots — the schedule's real
+    per-device live-activation window (1F1B's min(S-s, C) memory lever),
+    not the fill-drain C — and backward runs *explicitly* (no AD through the
+    scan), so no per-tick residuals accumulate either.
+
+    Gradients are accumulated per chunk and reduced AFTER the scan in the
+    canonical descending-chunk order (the fill-drain drain order the host
+    engine uses), so every schedule produces a bit-identical update; the
+    returned ``(grads, loss_sum, count)`` are psum-replicated over
+    ``stage_axis`` (each device contributes exactly its stages' layer
+    gradients, zeros elsewhere).
+    """
+    from repro.core.vma import match_vma
+
+    C = lowered.num_chunks
+    T, D = lowered.num_ticks, lowered.num_devices
+    d = lax.axis_index(stage_axis)
+    tree_map = jax.tree_util.tree_map
+
+    idx = {
+        name: jnp.asarray(getattr(lowered, name))
+        for name in ("phase", "stage", "chunk", "work_fslot", "in_fslot",
+                     "work_bslot", "in_bslot")
+    }
+
+    def pick(name, t):
+        row = lax.dynamic_index_in_dim(idx[name], t, 0, keepdims=False)
+        return lax.dynamic_index_in_dim(row, d, 0, keepdims=False)
+
+    zero_wire = jnp.zeros_like(wire_like)
+    fstash0 = jnp.zeros((lowered.n_fslots + 1,) + wire_like.shape, wire_like.dtype)
+    bstash0 = jnp.zeros((lowered.n_bslots + 1,) + wire_like.shape, wire_like.dtype)
+    gbuf0 = tree_map(lambda p: jnp.zeros((C + 1,) + p.shape, p.dtype), grads_like)
+    fwd_perm = [(i, (i + 1) % D) for i in range(D)]
+    bwd_perm = [(i, (i - 1) % D) for i in range(D)]
+
+    def tick_body(carry, t):
+        wire_f, wire_b, fstash, bstash, gbuf, loss, count = carry
+        # bank arrivals BEFORE the work reads (same-tick deliver-then-consume)
+        fstash = lax.dynamic_update_index_in_dim(fstash, wire_f, pick("in_fslot", t), 0)
+        bstash = lax.dynamic_update_index_in_dim(bstash, wire_b, pick("in_bslot", t), 0)
+        h_in = lax.dynamic_index_in_dim(fstash, pick("work_fslot", t), 0, keepdims=False)
+        ct_in = lax.dynamic_index_in_dim(bstash, pick("work_bslot", t), 0, keepdims=False)
+        phase = pick("phase", t)
+        y, d_h, grads, loss_sum, cnt = work_fn(
+            phase, pick("stage", t), pick("chunk", t), h_in, ct_in
+        )
+        # per-chunk gradient slots (sacrificial slot C on non-bwd ticks):
+        # slice-sized read+write per tick, reduced canonically after the scan
+        gc = jnp.where(phase == 2, pick("chunk", t), C)
+        gslot = tree_map(
+            lambda b: lax.dynamic_index_in_dim(b, gc, 0, keepdims=False), gbuf
+        )
+        gbuf = tree_map(
+            lambda b, acc, g: lax.dynamic_update_index_in_dim(b, acc + g, gc, 0),
+            gbuf, gslot, grads,
+        )
+        wire_f = lax.ppermute(y, stage_axis, perm=fwd_perm)
+        wire_b = lax.ppermute(d_h, stage_axis, perm=bwd_perm)
+        return (wire_f, wire_b, fstash, bstash, gbuf, loss + loss_sum, count + cnt), None
+
+    carry0 = (
+        zero_wire, zero_wire, fstash0, bstash0, gbuf0,
+        jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+    )
+    carry0 = match_vma(carry0, grads_like, vma_refs, extra=(stage_axis,))
+    (_, _, _, _, gbuf, loss, count), _ = lax.scan(tick_body, carry0, jnp.arange(T))
+
+    # canonical reduction: per layer, chunks in DESCENDING order — the host
+    # engine's fill-drain drain order — so floats accumulate identically no
+    # matter which schedule produced the per-chunk gradients
+    grads = tree_map(lambda b: jnp.zeros(b.shape[1:], b.dtype), gbuf)
+    for c in reversed(range(C)):
+        grads = tree_map(lambda g, b, c=c: g + b[c], grads, gbuf)
+    grads = lax.psum(grads, stage_axis)
+    loss = lax.psum(loss, stage_axis)
+    count = lax.psum(count, stage_axis)
+    return grads, loss, count
+
+
+def spmd_pipeline_scheduled_lanes(
+    work_fn: Callable[..., tuple],
+    lowered,
+    *,
+    wire_like: jax.Array,
+    grads_like: Any,
+):
+    """Sub-device-count substrate of ``spmd_pipeline_scheduled``: the same
+    per-tick dataflow with the device ring as a leading LANE axis inside one
+    program — ``ppermute`` becomes ``jnp.roll`` over lanes, psum a plain sum.
+
+    The lane loop is a static Python loop, so each lane's ``lax.switch``
+    dispatch stays a real XLA conditional executing ONE branch per tick.
+    (Emulating the ring with ``vmap(axis_name=...)`` instead would batch the
+    switch predicate and compute every branch in every lane — a ~(2S+1)×
+    FLOP blow-up; this substrate does D single-branch dispatches per tick,
+    the ring's aggregate work executed sequentially.) Numerics are identical
+    to the shard_map substrate: same banking, same canonical descending-chunk
+    gradient reduction — per (layer, chunk) slot exactly one lane ever
+    contributes, so the shared gradient buffer accumulates the same floats
+    the psum would."""
+    C = lowered.num_chunks
+    T, D = lowered.num_ticks, lowered.num_devices
+    tree_map = jax.tree_util.tree_map
+
+    idx = {
+        name: jnp.asarray(getattr(lowered, name))
+        for name in ("phase", "stage", "chunk", "work_fslot", "in_fslot",
+                     "work_bslot", "in_bslot")
+    }
+
+    def pick(name, t, d):  # d is a static lane index
+        row = lax.dynamic_index_in_dim(idx[name], t, 0, keepdims=False)
+        return row[d]
+
+    wires0 = jnp.zeros((D,) + wire_like.shape, wire_like.dtype)
+    fstash0 = jnp.zeros((D, lowered.n_fslots + 1) + wire_like.shape, wire_like.dtype)
+    bstash0 = jnp.zeros((D, lowered.n_bslots + 1) + wire_like.shape, wire_like.dtype)
+    gbuf0 = tree_map(lambda p: jnp.zeros((C + 1,) + p.shape, p.dtype), grads_like)
+
+    def tick_body(carry, t):
+        wire_f, wire_b, fstash, bstash, gbuf, loss, count = carry
+        ys, dhs = [], []
+        for d in range(D):  # static: one single-branch dispatch per lane
+            f_d = lax.dynamic_update_index_in_dim(
+                fstash[d], wire_f[d], pick("in_fslot", t, d), 0
+            )
+            b_d = lax.dynamic_update_index_in_dim(
+                bstash[d], wire_b[d], pick("in_bslot", t, d), 0
+            )
+            fstash = fstash.at[d].set(f_d)
+            bstash = bstash.at[d].set(b_d)
+            h_in = lax.dynamic_index_in_dim(f_d, pick("work_fslot", t, d), 0, keepdims=False)
+            ct_in = lax.dynamic_index_in_dim(b_d, pick("work_bslot", t, d), 0, keepdims=False)
+            phase = pick("phase", t, d)
+            y, d_h, grads, loss_sum, cnt = work_fn(
+                phase, pick("stage", t, d), pick("chunk", t, d), h_in, ct_in
+            )
+            gc = jnp.where(phase == 2, pick("chunk", t, d), C)
+            gslot = tree_map(
+                lambda b: lax.dynamic_index_in_dim(b, gc, 0, keepdims=False), gbuf
+            )
+            gbuf = tree_map(
+                lambda b, acc, g: lax.dynamic_update_index_in_dim(b, acc + g, gc, 0),
+                gbuf, gslot, grads,
+            )
+            loss, count = loss + loss_sum, count + cnt
+            ys.append(y)
+            dhs.append(d_h)
+        # the ring hops: lane d's activation to lane d+1, cotangent to d-1
+        wire_f = jnp.roll(jnp.stack(ys), 1, axis=0)
+        wire_b = jnp.roll(jnp.stack(dhs), -1, axis=0)
+        return (wire_f, wire_b, fstash, bstash, gbuf, loss, count), None
+
+    carry0 = (
+        wires0, wires0, fstash0, bstash0, gbuf0,
+        jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+    )
+    (_, _, _, _, gbuf, loss, count), _ = lax.scan(tick_body, carry0, jnp.arange(T))
+    grads = tree_map(lambda b: jnp.zeros(b.shape[1:], b.dtype), gbuf)
+    for c in reversed(range(C)):  # canonical: the fill-drain drain order
+        grads = tree_map(lambda g, b, c=c: g + b[c], grads, gbuf)
+    return grads, loss, count
 
 
 # --------------------------------------------------- homogeneous helpers --

@@ -5,14 +5,22 @@ Two modes:
   * ``gnn`` — the paper's experiment: GAT node classification on the
     citation datasets, single-device or pipelined with a chunking strategy
     (paper-faithful ``sequential`` or beyond-paper ``halo``) on either
-    engine — ``--engine host`` (torchgpipe-style queue loop, pluggable
-    schedules) or ``--engine compiled`` (one jitted SPMD program):
+    engine — ``--engine host`` (torchgpipe-style queue loop) or ``--engine
+    compiled`` (one jitted SPMD program). Both engines take any
+    ``--schedule`` (fill_drain / 1f1b / interleaved); the compiled engine
+    lowers 1F1B/interleaved timelines into the jitted program
+    (``spmd_pipeline_scheduled``), so the memory/bubble wins run on the
+    fast path too:
 
         PYTHONPATH=src python -m repro.launch.train --mode gnn \
             --dataset pubmed --epochs 300 --stages 4 --chunks 4 \
             --strategy sequential --schedule 1f1b
         PYTHONPATH=src python -m repro.launch.train --mode gnn \
-            --dataset cora --stages 3 --chunks 4 --engine compiled
+            --dataset cora --stages 4 --chunks 4 --engine compiled \
+            --schedule 1f1b
+        PYTHONPATH=src python -m repro.launch.train --mode gnn \
+            --dataset cora --stages 4 --chunks 4 --engine compiled \
+            --schedule interleaved --pipe-devices 2
 
   * ``lm`` — pipelined LM pretraining on the synthetic token stream (any
     assigned arch; smoke-sized by default so it runs on CPU). ``--schedule
@@ -114,6 +122,7 @@ def run_gnn(args) -> dict:
         "edge_cut": plan.edge_cut,
         "bubble_fraction": sched_stats.get("bubble_fraction"),
         "peak_live_activations": sched_stats.get("measured_peak_live_activations"),
+        "peak_live_accounted": sched_stats.get("peak_live_activations"),
         "train_loss": float(m["train_loss"]),
         "train_acc": float(m["train_acc"]),
         "val_acc": float(m["val_acc"]),
@@ -221,7 +230,8 @@ def main():
     ap.add_argument("--strategy", default="sequential")
     ap.add_argument("--engine", default="host", choices=["host", "compiled"],
                     help="gnn pipeline engine: host-driven GPipe queue loop or "
-                         "one compiled SPMD program (shard_map/ppermute)")
+                         "one compiled SPMD program (shard_map/ppermute); both "
+                         "accept any --schedule")
     ap.add_argument("--schedule", default="fill_drain",
                     choices=["fill_drain", "gpipe", "1f1b", "interleaved"])
     ap.add_argument("--pipe-devices", type=int, default=None,

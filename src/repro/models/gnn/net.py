@@ -215,6 +215,56 @@ def make_gnn_stage(
     return stage_fn
 
 
+def make_gnn_stage_slices(
+    model: GNNModel,
+    bounds: list[tuple[int, int]],
+    widths: list[int],
+    graph: GraphBatch,
+    rng: jax.Array,
+    *,
+    train: bool = True,
+):
+    """Params-EXPLICIT per-stage slice functions for the scheduled executor
+    (``spmd_pipeline_scheduled``), which differentiates stages explicitly
+    via ``jax.vjp`` instead of AD-ing through the whole pipeline program.
+
+    Returns ``slices[s](params, chunk, h_in) -> h_out``: apply the
+    contiguous ``SeqLayer`` slice ``[lo, hi)`` of stage ``s`` to chunk
+    ``chunk`` (a traced int32 — the stacked subgraphs are closed over and
+    dynamic-sliced by it, exactly like ``make_gnn_stage``). ``params`` is
+    the FULL layer-params list so ``jax.vjp(f, params, h_in)`` yields a
+    full-params gradient pytree with zeros outside the stage's layers — the
+    uniform structure ``lax.switch`` and the cross-stage psum reduction
+    need. ``h_in``/``h_out`` are padded to the uniform wire width
+    (``travel_width``); stage 0 ignores ``h_in`` and reads the chunk's
+    features, so its input cotangent comes out zero automatically.
+
+    Per-(chunk, layer) dropout keys are derived exactly as the host engine
+    derives them (``split(fold_in(rng, chunk), n_layers)``), keeping every
+    schedule×engine combination bitwise-comparable.
+    """
+    n_layers = len(model.layers)
+    d_travel = travel_width(bounds, widths)
+
+    def make(s: int):
+        lo, hi = bounds[s]
+
+        def apply_slice(params, chunk, h_in):
+            g = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, chunk, 0, keepdims=False),
+                graph,
+            )
+            rngs = jax.random.split(jax.random.fold_in(rng, chunk), n_layers)
+            h = g.features if lo == 0 else h_in[:, : widths[lo]]
+            for i in range(lo, hi):
+                h = model.layers[i].apply(params[i], g, h, rngs[i], train)
+            return jnp.pad(h, ((0, 0), (0, d_travel - h.shape[-1])))
+
+        return apply_slice
+
+    return [make(s) for s in range(len(bounds))]
+
+
 def build_paper_gat(
     num_features: int,
     num_classes: int,

@@ -123,11 +123,150 @@ def test_engine_factory_and_config_validation(setup):
     _, m, _ = setup
     with pytest.raises(KeyError):
         make_engine("nope", m, GPipeConfig(balance=(3, 3), chunks=2))
-    # compiled executes fill-drain only; other schedules stay host features
+    # both engines accept every schedule; interleaved still needs num_devices
     with pytest.raises(ValueError):
-        make_engine("compiled", m, GPipeConfig(balance=(3, 3), chunks=2, schedule="1f1b"))
+        make_engine("compiled", m, GPipeConfig(balance=(3, 3), chunks=2, schedule="interleaved"))
+    comp = make_engine("compiled", m, GPipeConfig(balance=(3, 3), chunks=2, schedule="1f1b"))
+    assert comp.describe()["schedule"] == "1f1b"
     host = make_engine("host", m, GPipeConfig(balance=(3, 3), chunks=2, schedule="1f1b"))
     assert host.describe()["engine"] == "host"
+
+
+# ------------------------------------------- scheduled compiled executor --
+
+
+SCHEDULE_MATRIX = [  # (schedule, num_devices kwarg)
+    ("fill_drain", None),
+    ("1f1b", None),
+    ("interleaved", 2),
+]
+
+
+@pytest.mark.parametrize("schedule,pipe_devices", SCHEDULE_MATRIX)
+def test_compiled_schedules_match_host_fill_drain(setup, schedule, pipe_devices):
+    """The full schedule×engine matrix: every compiled schedule (fill-drain
+    scan path, 1F1B and interleaved through the scheduled executor) produces
+    the same loss trajectory and post-step params as the host fill-drain
+    baseline — the canonical gradient-reduction order makes the update
+    schedule-invariant on both engines. On hosts with fewer devices than the
+    schedule's placement the scheduled work dispatcher runs through the
+    lane-stacked substrate (spmd_pipeline_scheduled_lanes); with enough
+    devices it runs the shard_map ring — so CI forcing 1 and 4 host devices
+    covers both substrates."""
+    g, m, params = setup
+    opt = opt_lib.adam(1e-2)
+    C = 4
+    plan = make_plan(g, C, strategy="halo", halo_hops=2)
+    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
+    comp = make_engine("compiled", m, GPipeConfig(
+        balance=(2, 1, 1, 2), chunks=C, schedule=schedule, num_devices=pipe_devices,
+    ))
+    ph = pc = params
+    oh = oc = opt.init(params)
+    key = jax.random.PRNGKey(42)
+    for _ in range(3):
+        key, rng = jax.random.split(key)
+        ph, oh, lh = host.train_step(ph, oh, plan, rng, opt)
+        pc, oc, lc = comp.train_step(pc, oc, plan, rng, opt)
+        assert abs(float(lh) - float(lc)) < 1e-4, (schedule, float(lh), float(lc))
+    _params_close(ph, pc, atol=5e-4)
+
+
+def test_scheduled_engine_peak_live_below_fill_drain(setup):
+    """The scheduled executor's stash accounting realizes 1F1B's memory
+    lever: peak banked activations strictly below the fill-drain S*C at
+    chunks >= 4 (the fig3 acceptance invariant), and the per-device slot
+    count is the schedule's live window, not C."""
+    g, m, params = setup
+    opt = opt_lib.adam(1e-2)
+    C = 4
+    plan = make_plan(g, C, strategy="halo", halo_hops=2)
+    pipe = make_engine("compiled", m, GPipeConfig(
+        balance=(2, 1, 1, 2), chunks=C, schedule="1f1b",
+    ))
+    stats = {}
+    pipe.train_step(params, opt.init(params), plan, jax.random.PRNGKey(0), opt, stats=stats)
+    S = 4
+    assert stats["measured_peak_live_activations"] < S * C
+    assert stats["stash_slots_per_device"] <= min(S, C) + 1
+    # and the schedule's own accounting agrees with the dominance claim
+    assert pipe.schedule.peak_live_activations(S, C) < S * C
+
+
+def test_scheduled_engine_rejects_illegal_combo(setup):
+    """Interleaved needs chunks divisible by devices: the lowering-time
+    ValueError surfaces at train_step, not as silent mis-routing."""
+    g, m, params = setup
+    opt = opt_lib.adam(1e-2)
+    plan = make_plan(g, 3, strategy="sequential")
+    pipe = make_engine("compiled", m, GPipeConfig(
+        balance=(2, 1, 1, 2), chunks=3, schedule="interleaved", num_devices=2,
+    ))
+    with pytest.raises(ValueError):
+        pipe.train_step(params, opt.init(params), plan, jax.random.PRNGKey(0), opt)
+
+
+# ------------------------------------------------ ragged / empty chunks --
+
+
+def _plan_with_empty_chunk(g, chunks=3):
+    """A ragged halo plan plus one chunk that is EMPTY after core-halo
+    padding: its nodes are all pad duplicates of node 0 with core_mask False
+    (count == 0), the shape every chunk in the plan shares."""
+    import dataclasses as dc
+
+    import numpy as np
+
+    from repro.core.microbatch import MicroBatch
+    from repro.graphs.data import subgraph
+    from repro.graphs.partition import pad_partition
+
+    plan = make_plan(g, chunks, strategy="halo", halo_hops=2)
+    n_pad = max(mb.num_nodes for mb in plan.batches)
+    nodes, core = pad_partition(
+        np.zeros(0, dtype=np.int64), np.zeros(0, dtype=bool), n_pad
+    )
+    empty = MicroBatch(graph=subgraph(g, nodes), core_mask=jnp.asarray(core))
+    assert int(empty.core_mask.sum()) == 0
+    return dc.replace(
+        plan, chunks=chunks + 1, batches=plan.batches + [empty], _stacked=None
+    )
+
+
+def test_stacked_plan_keeps_empty_chunk_mask_correct(setup):
+    g, _, _ = setup
+    plan = _plan_with_empty_chunk(g, chunks=3)
+    stacked = plan.stacked()
+    assert stacked.chunks == 4
+    # the empty chunk contributes zero loss rows and zero norm mass
+    assert int(stacked.core_mask[3].sum()) == 0
+    assert int((stacked.graph.train_mask[3] & stacked.core_mask[3]).sum()) == 0
+    assert float(jnp.abs(stacked.graph.norm[3]).sum()) > 0  # self-loops exist...
+    # ...but every loss-counting row across the plan is a real core node
+    assert int(stacked.core_mask.sum()) == g.num_nodes
+
+
+def test_empty_chunk_trains_identically_on_both_engines(setup):
+    """A count=0 chunk must ride the scheduled executor as an inert
+    microbatch: same loss and params as the host engine running the same
+    ragged plan, and everything stays finite."""
+    g, m, params = setup
+    opt = opt_lib.adam(1e-2)
+    plan = _plan_with_empty_chunk(g, chunks=3)  # C = 4 incl. empty
+    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=4))
+    comp = make_engine("compiled", m, GPipeConfig(
+        balance=(2, 1, 1, 2), chunks=4, schedule="1f1b",
+    ))
+    ph = pc = params
+    oh = oc = opt.init(params)
+    key = jax.random.PRNGKey(7)
+    for _ in range(2):
+        key, rng = jax.random.split(key)
+        ph, oh, lh = host.train_step(ph, oh, plan, rng, opt)
+        pc, oc, lc = comp.train_step(pc, oc, plan, rng, opt)
+        assert jnp.isfinite(lh) and jnp.isfinite(lc)
+        assert abs(float(lh) - float(lc)) < 1e-4, (float(lh), float(lc))
+    _params_close(ph, pc, atol=5e-4)
 
 
 # ------------------------------------------- pytree-generalized pipeline --
@@ -199,8 +338,10 @@ def _run(src: str, devices: int = 4, timeout: int = 1200):
 
 @pytest.mark.slow
 def test_compiled_engine_matches_host_multidevice():
-    """The shard_map/ppermute ring substrate (4 simulated devices, one stage
-    each) produces the same per-epoch losses and post-step params as the
+    """The full schedule×engine matrix on 4 simulated devices: the
+    fill-drain shard_map/ppermute ring AND the scheduled executor (1F1B on
+    the 4-device ring, interleaved on a 2-device ring with 2 virtual stages
+    each) all produce the same per-epoch losses and post-step params as the
     host GPipe fill-drain baseline."""
     out = _run("""
     import jax, jax.numpy as jnp
@@ -218,17 +359,20 @@ def test_compiled_engine_matches_host_multidevice():
     C = 4
     plan = make_plan(g, C, strategy="halo", halo_hops=2)
     host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
-    comp = make_engine("compiled", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
-    ph = pc = params
-    oh = oc = opt.init(params)
-    key = jax.random.PRNGKey(42)
-    for ep in range(3):
-        key, rng = jax.random.split(key)
-        ph, oh, lh = host.train_step(ph, oh, plan, rng, opt)
-        pc, oc, lc = comp.train_step(pc, oc, plan, rng, opt)
-        assert abs(float(lh) - float(lc)) < 1e-4, (ep, float(lh), float(lc))
-    for a, b in zip(jax.tree_util.tree_leaves(ph), jax.tree_util.tree_leaves(pc)):
-        assert jnp.allclose(a, b, atol=1e-4), float(jnp.max(jnp.abs(a - b)))
-    print('MD_ENGINE_OK')
+    for schedule, nd in (("fill_drain", None), ("1f1b", None), ("interleaved", 2)):
+        comp = make_engine("compiled", m, GPipeConfig(
+            balance=(2, 1, 1, 2), chunks=C, schedule=schedule, num_devices=nd))
+        ph = pc = params
+        oh = oc = opt.init(params)
+        key = jax.random.PRNGKey(42)
+        for ep in range(3):
+            key, rng = jax.random.split(key)
+            ph, oh, lh = host.train_step(ph, oh, plan, rng, opt)
+            pc, oc, lc = comp.train_step(pc, oc, plan, rng, opt)
+            assert abs(float(lh) - float(lc)) < 1e-4, (schedule, ep, float(lh), float(lc))
+        for a, b in zip(jax.tree_util.tree_leaves(ph), jax.tree_util.tree_leaves(pc)):
+            assert jnp.allclose(a, b, atol=5e-4), (schedule, float(jnp.max(jnp.abs(a - b))))
+        print('MD_ENGINE_OK', schedule)
     """)
-    assert "MD_ENGINE_OK" in out
+    for schedule in ("fill_drain", "1f1b", "interleaved"):
+        assert f"MD_ENGINE_OK {schedule}" in out

@@ -4,12 +4,16 @@ accounting, and schedule dominance (1F1B/interleaved vs fill-drain)."""
 import pytest
 
 from repro.core.schedule import (
+    PHASE_BWD,
+    PHASE_FWD,
+    PHASE_IDLE,
     FillDrainSchedule,
     InterleavedSchedule,
     OneFOneBSchedule,
     WorkItem,
     bubble_fraction,
     get_schedule,
+    lower_timeline,
     peak_live_activations,
     validate_timeline,
 )
@@ -162,6 +166,134 @@ def test_validate_timeline_catches_violations():
     ]
     with pytest.raises(AssertionError):
         validate_timeline(flipped, S, C)
+
+
+def test_validate_timeline_rejects_bwd_before_next_stage_fwd():
+    """Regression: a backward for chunk c on stage s scheduled before the
+    forward of c on stage s+1 must be rejected — the cotangent it consumes
+    does not exist yet. (The chained per-phase checks imply this for
+    consistent timelines; the direct check pins the property and reports the
+    offending item.)"""
+    S, C = 3, 2
+    good = {(it.stage, it.chunk, it.phase): it.tick
+            for it in FillDrainSchedule().timeline(S, C)}
+    bad = dict(good)
+    # pull bwd(1, 0) to before fwd(2, 0)
+    bad[(1, 0, "bwd")] = good[(2, 0, "fwd")] - 1
+    items = [WorkItem(t, s, c, ph) for (s, c, ph), t in bad.items()]
+    with pytest.raises(AssertionError):
+        validate_timeline(items, S, C)
+    # same-stage variant: bwd(1, 0) before fwd(1, 0)
+    bad = dict(good)
+    bad[(1, 0, "bwd")] = good[(1, 0, "fwd")]
+    items = [WorkItem(t, s, c, ph) for (s, c, ph), t in bad.items()]
+    with pytest.raises(AssertionError):
+        validate_timeline(items, S, C)
+
+
+# --------------------------------------------------- timeline lowering --
+
+
+def _replay(low):
+    """Interpret the lowered index arrays against an abstract machine and
+    assert the dataflow is exact: every fwd reads the value its upstream
+    stage produced, every bwd reads the stage input it stashed and the
+    cotangent its downstream stage sent back, slots never clobber live
+    values."""
+    S, C, D, T = low.num_stages, low.num_chunks, low.num_devices, low.num_ticks
+    wire_f = [None] * D  # value arriving at device d this tick
+    wire_b = [None] * D
+    fstash = [[None] * (low.n_fslots + 1) for _ in range(D)]
+    bstash = [[None] * (low.n_bslots + 1) for _ in range(D)]
+    done_f, done_b = set(), set()
+    for t in range(T):
+        send_f, send_b = [None] * D, [None] * D
+        for d in range(D):
+            if low.in_fslot[t, d] < low.n_fslots:
+                assert wire_f[d] is not None, (t, d, "banking a garbage fwd wire")
+                fstash[d][low.in_fslot[t, d]] = wire_f[d]
+            if low.in_bslot[t, d] < low.n_bslots:
+                assert wire_b[d] is not None, (t, d, "banking a garbage bwd wire")
+                bstash[d][low.in_bslot[t, d]] = wire_b[d]
+        for d in range(D):
+            ph = low.phase[t, d]
+            if ph == PHASE_IDLE:
+                continue
+            s, c = int(low.stage[t, d]), int(low.chunk[t, d])
+            if ph == PHASE_FWD:
+                if s > 0:
+                    got = fstash[d][low.work_fslot[t, d]]
+                    assert got == ("act", s - 1, c), (t, d, got, ("act", s - 1, c))
+                done_f.add((s, c))
+                send_f[(d + 1) % D] = ("act", s, c)
+            else:
+                assert (s, c) in done_f
+                if s > 0:
+                    got = fstash[d][low.work_fslot[t, d]]
+                    assert got == ("act", s - 1, c), (t, d, "bwd stage input")
+                if s < S - 1:
+                    got = bstash[d][low.work_bslot[t, d]]
+                    assert got == ("ct", s + 1, c), (t, d, got)
+                done_b.add((s, c))
+                send_b[(d - 1) % D] = ("ct", s, c)
+        wire_f, wire_b = send_f, send_b
+    assert done_f == {(s, c) for s in range(S) for c in range(C)}
+    assert done_b == done_f
+
+
+@pytest.mark.parametrize("S,C", [(2, 2), (4, 4), (4, 8), (3, 6), (6, 8)])
+def test_lowered_timeline_dataflow_exact(S, C):
+    for sched in _schedules_for(S, C):
+        low = lower_timeline(sched.timeline(S, C), S, C)
+        assert low.phase.shape == (low.num_ticks, low.num_devices)
+        assert int((low.phase == PHASE_FWD).sum()) == S * C
+        assert int((low.phase == PHASE_BWD).sum()) == S * C
+        _replay(low)
+
+
+@pytest.mark.parametrize("S,C", [(4, 4), (4, 8), (6, 6)])
+def test_lowered_1f1b_stash_window(S, C):
+    """The scheduled executor's stash realizes 1F1B's memory cap: the
+    per-device slot count stays within the min(S, C) live window (+1 tick of
+    wire slack), and true peak banked activations undercut fill-drain's."""
+    ob = lower_timeline(OneFOneBSchedule().timeline(S, C), S, C)
+    fd = lower_timeline(FillDrainSchedule().timeline(S, C), S, C)
+    assert ob.n_fslots <= min(S, C) + 1
+    assert fd.n_fslots == C  # fill-drain banks every chunk
+    if C >= 4:
+        assert ob.peak_live_stash < fd.peak_live_stash
+    assert ob.peak_live_stash <= OneFOneBSchedule().peak_live_activations(S, C)
+
+
+def test_lower_timeline_rejects_non_ring_placement():
+    items = FillDrainSchedule().timeline(2, 2)
+    # every stage on one device: two items per tick, caught by validation
+    broken = [
+        WorkItem(it.tick, it.stage, it.chunk, it.phase, device=0)
+        for it in items
+    ]
+    with pytest.raises(AssertionError):
+        lower_timeline(broken, 2, 2)
+    # reversed placement (stage s on device S-1-s) is not a forward ring
+    items = FillDrainSchedule().timeline(3, 3)
+    reversed_ = [
+        WorkItem(it.tick, it.stage, it.chunk, it.phase, device=2 - it.device)
+        for it in items
+    ]
+    with pytest.raises(ValueError):
+        lower_timeline(reversed_, 3, 3)
+
+
+def test_lower_timeline_interleaved_devices():
+    il = InterleavedSchedule(2)
+    low = lower_timeline(il.timeline(4, 4), 4, 4)
+    assert low.num_devices == 2
+    # every device runs both of its virtual stages
+    for d in range(2):
+        stages = {int(s) for s, p in zip(low.stage[:, d], low.phase[:, d])
+                  if p != PHASE_IDLE}
+        assert stages == {d, d + 2}
+    _replay(low)
 
 
 def test_describe_keys():
