@@ -16,13 +16,23 @@ regressed:
   * **memory** — the scheduled executor's 1F1B peak live activations must
     stay strictly below the fill-drain compiled accounting at every chunk
     count >= 4 (the schedule-aware engine's headline memory invariant; this
-    check is deterministic, not timing-based).
+    check is deterministic, not timing-based);
+  * **zero-bubble** — at every chunk count >= 4 the compiled zb-h1 row must
+    beat or match the same run's compiled 1F1B step time (within the same
+    ``--threshold`` slack the speed gate uses), its bubble fraction must sit
+    strictly below 1F1B's, and its peak-live accounting must not exceed
+    1F1B's (the last two are deterministic). zb-h1's step-time win comes
+    from filling the drain bubble with deferred weight-grad (W) work, which
+    needs ticks to actually run concurrently — so produce the table under
+    forced host devices (the CI gate uses 4; see below), not on the serial
+    lane substrate where a drained bubble saves nothing.
 
 Intentional regressions (e.g. trading speed for a feature) are overridden by
 applying the ``perf-regression-ok`` label to the PR — the CI job skips the
 gate when the label is present — and committing a refreshed baseline.
 
-    PYTHONPATH=src python -m benchmarks.run --fast --only fig3 --json-out /tmp/bench
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python -m benchmarks.run --fast --only fig3 --json-out /tmp/bench
     python -m benchmarks.check_perf --current /tmp/bench/BENCH_fig3.json
 """
 
@@ -109,6 +119,39 @@ def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) ->
             failures.append(
                 f"memory: {key} peak_live {peak} not strictly below "
                 f"fill-drain accounting {fd_peak}"
+            )
+
+    # zero-bubble invariants: at chunks >= 4 compiled zb-h1 must beat or
+    # match compiled 1F1B's step time (same run, same threshold slack as the
+    # speed gate), undercut its bubble strictly, and not exceed its
+    # peak-live accounting
+    for key, row in sorted(c_rows.items()):
+        if not key.startswith("compiled/zb-h1/"):
+            continue
+        chunks = _chunks_of(key)
+        if chunks < 4:
+            continue
+        ob = c_rows.get(f"compiled/1f1b/chunks{chunks}")
+        if ob is None:
+            failures.append(f"zero-bubble: {key} has no compiled 1f1b row to compare")
+            continue
+        if row["step_s"] > ob["step_s"] * threshold:
+            failures.append(
+                f"zero-bubble: {key} step {row['step_s']:.4f}s does not beat/"
+                f"match 1f1b {ob['step_s']:.4f}s (allowed "
+                f"{ob['step_s'] * threshold:.4f})"
+            )
+        if not row["bubble"] < ob["bubble"]:
+            failures.append(
+                f"zero-bubble: {key} bubble {row['bubble']:.3f} not strictly "
+                f"below 1f1b's {ob['bubble']:.3f}"
+            )
+        peak, ob_peak = row.get("peak_live"), ob.get("peak_live")
+        if peak is None or ob_peak is None:
+            failures.append(f"zero-bubble: {key} peak-live accounting missing")
+        elif peak > ob_peak:
+            failures.append(
+                f"zero-bubble: {key} peak_live {peak} exceeds 1f1b's {ob_peak}"
             )
     return failures
 

@@ -4,9 +4,12 @@ The paper's slowdown comes from per-chunk sub-graph rebuilds; we report
 epoch time AND the isolated rebuild cost so the overhead source is explicit.
 
 Beyond-paper: every chunk count runs the full engine × schedule matrix —
-host (fill-drain / 1F1B / interleaved where legal) and compiled, where
-fill-drain runs the fused scan and 1F1B/interleaved run the scheduled
-executor (``spmd_pipeline_scheduled``) inside the same jitted program. Each
+host (fill-drain / 1F1B / interleaved / zb-h1 where legal) and compiled,
+where fill-drain runs the fused scan and 1F1B/interleaved/zb-h1 run the
+scheduled executor (``spmd_pipeline_scheduled``) inside the same jitted
+program (zb-h1 splits every backward into B/W halves and fills the drain
+bubble with deferred weight-grad work — its win needs concurrent ticks, so
+the CI perf gate measures this table under 4 forced host devices). Each
 row carries the schedule's bubble fraction and peak live activations
 (measured on the host engine, static stash accounting on the scheduled
 compiled path) next to the epoch time; ``compiled_vs_host`` reports the
@@ -27,7 +30,7 @@ from repro.core.microbatch import make_plan
 from repro.graphs import load_dataset
 from repro.launch.train import run_gnn
 
-SCHEDULES = ("fill_drain", "1f1b", "interleaved")
+SCHEDULES = ("fill_drain", "1f1b", "interleaved", "zb-h1")
 ENGINES = ("host", "compiled")
 
 

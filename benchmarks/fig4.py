@@ -4,15 +4,18 @@ sequential = paper-faithful (edges dropped at chunk boundaries);
 greedy     = structure-aware partitions (beyond-paper);
 halo       = exact k-hop ghost nodes (beyond-paper; should match full batch).
 
-The schedule-comparison columns rerun the halo config under 1F1B and
-interleaved 1F1B: accuracy must NOT move (per-chunk gradients are reduced in
-a canonical order, so every schedule's update is bit-identical) while the
-bubble/peak-activation accounting does — schedules buy speed and memory,
-never model quality. The ``engine=compiled`` columns rerun the same halo
-config through the compiled SPMD engine under every schedule (fill-drain on
-the fused scan, 1F1B/interleaved on the scheduled executor): same plan,
-same seed, so their accuracy sitting next to the host rows is the
-schedule×engine-equivalence smoke.
+The schedule-comparison columns rerun the halo config under 1F1B,
+interleaved 1F1B and zero-bubble zb-h1 (split B/W backward): accuracy must
+NOT move (per-chunk gradients are reduced in a canonical order, so every
+schedule's update is bit-identical) while the bubble/peak-activation
+accounting does — schedules buy speed and memory, never model quality. The
+``engine=compiled`` columns rerun the same halo config through the compiled
+SPMD engine under every schedule (fill-drain on the fused scan,
+1F1B/interleaved/zb-h1 on the scheduled executor): same plan, same seed, so
+their accuracy sitting next to the host rows is the
+schedule×engine-equivalence smoke — and those rows' metrics now come from
+``CompiledGNNPipeline.evaluate``, the forward-only jitted scheduled
+program, so the compiled eval path is exercised (and must agree) too.
 """
 
 from __future__ import annotations
@@ -50,7 +53,7 @@ def run(*, dataset="cora", epochs=60, strategies=("sequential", "greedy", "halo"
             )
             rows.append((strategy, chunks, r["val_acc"]))
     # schedule-equivalence columns: same halo config, every schedule
-    for schedule in ("fill_drain", "1f1b", "interleaved"):
+    for schedule in ("fill_drain", "1f1b", "interleaved", "zb-h1"):
         if schedule == "fill_drain" and halo4 is not None:
             r = halo4  # identical config already trained above
         else:
@@ -72,7 +75,7 @@ def run(*, dataset="cora", epochs=60, strategies=("sequential", "greedy", "halo"
     # interleaved the scheduled executor. Accuracy must sit on top of the
     # host fill-drain row for all of them (schedule- AND engine-invariance).
     for schedule, pipe_devices in (
-        ("fill_drain", None), ("1f1b", None), ("interleaved", 2),
+        ("fill_drain", None), ("1f1b", None), ("interleaved", 2), ("zb-h1", None),
     ):
         args = types.SimpleNamespace(
             mode="gnn", dataset=dataset, backend="padded", strategy="halo",

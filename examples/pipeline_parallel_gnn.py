@@ -23,7 +23,8 @@ def print_schedule_matrix(stages=4, pipe_devices=2, chunk_counts=(2, 4, 8)):
           f"D={pipe_devices} devices => V={stages // pipe_devices} virtual/device):")
     print(f"  {'schedule':<12} {'chunks':>6} {'ticks':>6} {'bubble':>8} {'peak_live':>10}")
     for name, kw in (("fill_drain", {}), ("1f1b", {}),
-                     ("interleaved", {"num_devices": pipe_devices})):
+                     ("interleaved", {"num_devices": pipe_devices}),
+                     ("zb-h1", {})):
         sched = get_schedule(name, **kw)
         for chunks in chunk_counts:
             try:
@@ -63,6 +64,9 @@ def main():
     print("== ... and 1F1B INSIDE the compiled program (scheduled executor) ==")
     halo_c1 = run_gnn(cfg(stages=4, chunks=4, strategy="halo", engine="compiled",
                           schedule="1f1b"))
+    print("== ... and zero-bubble ZB-H1 (split B/W backward, deferred weight grads) ==")
+    halo_zb = run_gnn(cfg(stages=4, chunks=4, strategy="halo", engine="compiled",
+                          schedule="zb-h1"))
 
     print("\nsummary (val accuracy):")
     print(f"  full batch               {full['val_acc']:.3f}")
@@ -77,6 +81,10 @@ def main():
     print(f"  compiled halo / 1f1b     {halo_c1['val_acc']:.3f}   "
           f"peak_live {halo_c1['peak_live_activations']} "
           f"(stash accounting) vs fill-drain {4 * 4}")
+    print(f"  compiled halo / zb-h1    {halo_zb['val_acc']:.3f}   "
+          f"bubble {halo_zb['bubble_fraction']:.3f} vs 1f1b "
+          f"{halo_c1['bubble_fraction']:.3f}, peak_live "
+          f"{halo_zb['peak_live_activations']}")
     print_schedule_matrix()
 
 

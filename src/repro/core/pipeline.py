@@ -52,10 +52,20 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
 from repro.core.microbatch import MicroBatchPlan
-from repro.core.schedule import get_schedule, lower_timeline
+from repro.core.schedule import (
+    PHASE_BWD,
+    PHASE_BWD_B,
+    PHASE_BWD_W,
+    PHASE_FWD,
+    forward_timeline,
+    get_schedule,
+    lower_timeline,
+)
 from repro.core.spmd_pipe import (
     spmd_pipeline,
     spmd_pipeline_scheduled,
+    spmd_pipeline_scheduled_eval,
+    spmd_pipeline_scheduled_eval_lanes,
     spmd_pipeline_scheduled_lanes,
 )
 from repro.models.gnn.net import (
@@ -63,6 +73,7 @@ from repro.models.gnn.net import (
     activation_widths,
     make_gnn_stage,
     make_gnn_stage_slices,
+    make_gnn_stage_slices_bw,
     travel_width,
 )
 from repro.train import optimizer as opt_lib
@@ -73,7 +84,7 @@ class GPipeConfig:
     balance: tuple[int, ...]  # layers per stage; sums to len(model.layers)
     chunks: int
     devices: tuple | None = None  # optional per-stage device placement
-    schedule: str = "fill_drain"  # "fill_drain" | "gpipe" | "1f1b" | "interleaved"
+    schedule: str = "fill_drain"  # "fill_drain"|"gpipe"|"1f1b"|"interleaved"|"zb-h1"
     num_devices: int | None = None  # interleaved: physical devices (V = stages/devices)
     remat: bool = True  # compiled engine: GPipe-style activation re-materialization
 
@@ -156,6 +167,10 @@ class GPipe(PipelineEngine):
         super().__init__(model, config)
         self._fwd_fns = [self._make_fwd(s) for s in range(config.num_stages)]
         self._bwd_fns = [self._make_bwd(s) for s in range(config.num_stages)]
+        # split-backward halves (zb-h1); jit is lazy, so unused schedules
+        # never pay for them
+        self._bwd_b_fns = [self._make_bwd_b(s) for s in range(config.num_stages)]
+        self._bwd_w_fns = [self._make_bwd_w(s) for s in range(config.num_stages)]
         self._loss_grad = jax.jit(jax.value_and_grad(_chunk_loss_sum, argnums=0, has_aux=True))
 
     def _stage_apply(self, s: int, stage_params: list, mb_graph, h, rngs, train: bool):
@@ -183,6 +198,35 @@ class GPipe(PipelineEngine):
             return d_params, d_h
 
         return jax.jit(bwd)
+
+    def _make_bwd_b(self, s: int):
+        """Zero-bubble B half: input-grad only (vjp wrt the stage input, so
+        the weight-grad work is dead code) — the critical-path product."""
+
+        def bwd_b(stage_params, mb_graph, h_in, rngs, ct):
+            def f(h):
+                return self._stage_apply(s, stage_params, mb_graph, h, rngs, True)
+
+            _, vjp = jax.vjp(f, h_in)
+            (d_h,) = vjp(ct)
+            return d_h
+
+        return jax.jit(bwd_b)
+
+    def _make_bwd_w(self, s: int):
+        """Zero-bubble W half: weight-grad only, re-materialized from the
+        residual its B half banked (the saved stage input + applied
+        cotangent) — runs whenever the schedule finds an idle tick."""
+
+        def bwd_w(stage_params, mb_graph, h_in, rngs, ct):
+            def f(p):
+                return self._stage_apply(s, p, mb_graph, h_in, rngs, True)
+
+            _, vjp = jax.vjp(f, stage_params)
+            (d_params,) = vjp(ct)
+            return d_params
+
+        return jax.jit(bwd_w)
 
     def _place(self, tree, s: int):
         devs = self.config.devices
@@ -255,9 +299,11 @@ class GPipe(PipelineEngine):
         saved: dict[tuple[int, int], Any] = {}
         outs: dict[int, Any] = {}
         cts: dict[int, Any] = {}
+        residuals: dict[tuple[int, int], Any] = {}  # zb-h1: (h_in, ct) per B
         chunk_losses: list[Any] = [None] * C
         chunk_grads: list[list[Any]] = [[None] * C for _ in range(S)]
         peak_live = 0
+        peak_residuals = 0
 
         for it in timeline:
             if it.phase == "fwd":
@@ -266,7 +312,7 @@ class GPipe(PipelineEngine):
                 continue
             s, c = it.stage, it.chunk
             mb = plan.batches[c]
-            if s == S - 1:
+            if s == S - 1 and it.phase in ("bwd", "bwd_b"):
                 # the chunk's loss cotangent, computed once its fwd completes
                 (loss_sum, count), d_h = self._loss_grad(
                     outs.pop(c), mb.graph.labels, mb.graph.train_mask & mb.core_mask
@@ -276,18 +322,38 @@ class GPipe(PipelineEngine):
             rngs = self._layer_rngs(rng, c)
             lo, hi = self._bounds[s]
             t0 = time.perf_counter()
-            d_params, d_h = self._bwd_fns[s](
-                self.stage_params(params, s),
-                mb.graph,
-                saved.pop((s, c)),
-                rngs[lo:hi],
-                cts[c],
-            )
+            if it.phase == "bwd":
+                d_params, d_h = self._bwd_fns[s](
+                    self.stage_params(params, s),
+                    mb.graph,
+                    saved.pop((s, c)),
+                    rngs[lo:hi],
+                    cts[c],
+                )
+                cts[c] = d_h
+                chunk_grads[s][c] = d_params
+                produced = d_h
+            elif it.phase == "bwd_b":
+                # B: emit the upstream cotangent now, defer the weight grad
+                # — the stage input moves from `saved` into the W residual
+                h_in = saved.pop((s, c))
+                ct = cts[c]
+                d_h = self._bwd_b_fns[s](
+                    self.stage_params(params, s), mb.graph, h_in, rngs[lo:hi], ct
+                )
+                residuals[(s, c)] = (h_in, ct)
+                peak_residuals = max(peak_residuals, len(residuals))
+                cts[c] = d_h
+                produced = d_h
+            else:  # "bwd_w": consume the residual, produce the weight grad
+                h_in, ct = residuals.pop((s, c))
+                chunk_grads[s][c] = self._bwd_w_fns[s](
+                    self.stage_params(params, s), mb.graph, h_in, rngs[lo:hi], ct
+                )
+                produced = chunk_grads[s][c]  # W emits no cotangent
             if record is not None:
-                jax.block_until_ready(d_h)
-                record.append(("bwd", it.tick, s, c, time.perf_counter() - t0))
-            cts[c] = d_h
-            chunk_grads[s][c] = d_params
+                jax.block_until_ready(produced)
+                record.append((it.phase, it.tick, s, c, time.perf_counter() - t0))
 
         # canonical reduction — per stage, chunks in descending order (the
         # fill-drain drain order), so the accumulated floats are identical
@@ -308,6 +374,7 @@ class GPipe(PipelineEngine):
         if stats is not None:
             stats.update(self.schedule.describe(S, C))
             stats["measured_peak_live_activations"] = peak_live
+            stats["measured_peak_w_residuals"] = peak_residuals
 
         scale = 1.0 / jnp.maximum(total_count, 1.0)
         grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
@@ -379,6 +446,7 @@ class CompiledGNNPipeline(PipelineEngine):
         super().__init__(model, config)
         self._widths: list[int] | None = None
         self._steps: dict = {}
+        self._evals: dict = {}  # (chunks, n_pad, max_deg) -> jitted eval fn
         self._travel_cache: dict = {}
         self._lowered: dict = {}  # chunks -> LoweredTimeline (scheduled path)
 
@@ -467,17 +535,22 @@ class CompiledGNNPipeline(PipelineEngine):
 
         return jax.jit(step)
 
-    def _make_work_fn(self, widths: list[int], params, graph, labels, m, rng):
+    def _make_work_fn(self, widths: list[int], params, graph, labels, m, rng, *, phases):
         """The per-tick work dispatcher for ``spmd_pipeline_scheduled``: one
-        ``lax.switch`` over 1 + 2·S branches (idle, fwd per stage, bwd per
-        stage). Backward branches are explicit ``jax.vjp``s of the
-        params-explicit stage slices — differentiating wrt the FULL params
-        list yields a full-shaped gradient pytree with zeros outside the
-        stage's layers, which is exactly what the canonical cross-stage psum
-        reduction needs. The last stage derives its cotangent from the same
-        summed masked-NLL the host engine differentiates
-        (``_chunk_loss_sum``), so the loss trajectory matches chunk for
-        chunk."""
+        ``lax.switch`` over 1 + 4·S branches (idle, then fwd / fused bwd /
+        split B / split W per stage; phases the timeline never emits —
+        ``phases`` is the set it does — compile to the trivial idle branch).
+        Backward branches are explicit ``jax.vjp``s of the params-explicit
+        stage slices — differentiating wrt the FULL params list yields a
+        full-shaped gradient pytree with zeros outside the stage's layers,
+        which is exactly what the canonical cross-stage psum reduction
+        needs. The last stage derives its cotangent from the same summed
+        masked-NLL the host engine differentiates (``_chunk_loss_sum``) —
+        in the fused bwd branch or, under zb-h1, in the B half — so the
+        loss trajectory matches chunk for chunk. Split B/W branches come
+        from ``make_gnn_stage_slices_bw``: B emits the upstream cotangent
+        plus the (input, cotangent) residual; W re-materializes from the
+        residual and emits the deferred weight grad."""
         S = self.config.num_stages
         model = self.model
         slices = make_gnn_stage_slices(
@@ -486,18 +559,32 @@ class CompiledGNNPipeline(PipelineEngine):
         d_travel = travel_width(self._bounds, widths)
         n_pad = graph.features.shape[1]
         zero_wire = jnp.zeros((n_pad, d_travel), graph.features.dtype)
+        zero_wres = (zero_wire, zero_wire)
         zero = jnp.zeros((), jnp.float32)
+
+        def loss_ct(y, chunk):
+            logp = y[:, : model.out_dim]
+            (loss_sum, count), d_logp = jax.value_and_grad(
+                _chunk_loss_sum, argnums=0, has_aux=True
+            )(logp, labels[chunk], m[chunk])
+            ct = jnp.pad(d_logp, ((0, 0), (0, d_travel - d_logp.shape[-1])))
+            return ct, loss_sum, count
+
+        b_fns, w_fns = make_gnn_stage_slices_bw(
+            model, self._bounds, widths, graph, rng, train=True, loss_ct=loss_ct
+        )
 
         def zeros_grads():
             return jax.tree_util.tree_map(jnp.zeros_like, params)
 
         def idle(operand):
-            return zero_wire, zero_wire, zeros_grads(), zero, zero
+            return zero_wire, zero_wire, zero_wres, zeros_grads(), zero, zero
 
         def fwd(s):
             def branch(operand):
-                chunk, h_in, _ct = operand
-                return slices[s](params, chunk, h_in), zero_wire, zeros_grads(), zero, zero
+                chunk, h_in, _ct, _w = operand
+                y = slices[s](params, chunk, h_in)
+                return y, zero_wire, zero_wres, zeros_grads(), zero, zero
 
             return branch
 
@@ -505,31 +592,53 @@ class CompiledGNNPipeline(PipelineEngine):
             last = s == S - 1
 
             def branch(operand):
-                chunk, h_in, ct = operand
+                chunk, h_in, ct, _w = operand
 
                 def f(p, h):
                     return slices[s](p, chunk, h)
 
                 y, vjp = jax.vjp(f, params, h_in)
                 if last:
-                    logp = y[:, : model.out_dim]
-                    (loss_sum, count), d_logp = jax.value_and_grad(
-                        _chunk_loss_sum, argnums=0, has_aux=True
-                    )(logp, labels[chunk], m[chunk])
-                    ct = jnp.pad(d_logp, ((0, 0), (0, d_travel - d_logp.shape[-1])))
+                    ct, loss_sum, count = loss_ct(y, chunk)
                 else:
                     loss_sum = count = zero
                 d_params, d_h = vjp(ct)
-                return zero_wire, d_h, d_params, loss_sum, count
+                return zero_wire, d_h, zero_wres, d_params, loss_sum, count
 
             return branch
 
-        branches = [idle] + [fwd(s) for s in range(S)] + [bwd(s) for s in range(S)]
+        def bwd_b(s):
+            def branch(operand):
+                chunk, h_in, ct, _w = operand
+                d_h, w_out, loss_sum, count = b_fns[s](params, chunk, h_in, ct)
+                return zero_wire, d_h, w_out, zeros_grads(), loss_sum, count
 
-        def work_fn(phase, stage, chunk, h_in, ct):
-            # idle -> 0, fwd(s) -> 1 + s, bwd(s) -> 1 + S + s
+            return branch
+
+        def bwd_w(s):
+            def branch(operand):
+                chunk, _h, _ct, w_res = operand
+                d_params = w_fns[s](params, chunk, w_res)
+                return zero_wire, zero_wire, zero_wres, d_params, zero, zero
+
+            return branch
+
+        def used(phase, make):
+            return [make(s) if phase in phases else idle for s in range(S)]
+
+        branches = (
+            [idle]
+            + used(PHASE_FWD, fwd)
+            + used(PHASE_BWD, bwd)
+            + used(PHASE_BWD_B, bwd_b)
+            + used(PHASE_BWD_W, bwd_w)
+        )
+
+        def work_fn(phase, stage, chunk, h_in, ct, w_res):
+            # idle -> 0, fwd(s) -> 1 + s, bwd(s) -> 1 + S + s,
+            # bwd_b(s) -> 1 + 2S + s, bwd_w(s) -> 1 + 3S + s
             index = jnp.where(phase == 0, 0, (phase - 1) * S + stage + 1)
-            return lax.switch(index, branches, (chunk, h_in, ct))
+            return lax.switch(index, branches, (chunk, h_in, ct, w_res))
 
         return work_fn
 
@@ -548,9 +657,12 @@ class CompiledGNNPipeline(PipelineEngine):
         d_travel = travel_width(self._bounds, widths)
 
         spmd = jax.device_count() >= D
+        phases = set(np.unique(lowered.phase).tolist())
 
         def local(params, graph, labels, m, rng):
-            work_fn = self._make_work_fn(widths, params, graph, labels, m, rng)
+            work_fn = self._make_work_fn(
+                widths, params, graph, labels, m, rng, phases=phases
+            )
             wire_like = jnp.zeros(
                 (graph.features.shape[1], d_travel), graph.features.dtype
             )
@@ -581,6 +693,119 @@ class CompiledGNNPipeline(PipelineEngine):
             return params, opt_state, loss_sum / jnp.maximum(count, 1.0)
 
         return jax.jit(step)
+
+    def _build_eval(self, widths: list[int], chunks: int):
+        """One jitted forward-only program (no vjp, no optimizer): the
+        fill-drain forward wave lowered through the same machinery as the
+        train schedules (``forward_timeline`` + ``lower_timeline(...,
+        forward_only=True)``) and executed by the scheduled executor's eval
+        twin — the shard_map ring with enough devices, the lane-stacked
+        substrate below it. Metrics are computed over every chunk's CORE
+        nodes (padding and halo ghosts masked out), fused into the same
+        program."""
+        S = self.config.num_stages
+        lowered = lower_timeline(
+            forward_timeline(S, chunks), S, chunks, forward_only=True
+        )
+        D = lowered.num_devices
+        d_travel = travel_width(self._bounds, widths)
+        model, bounds = self.model, self._bounds
+        spmd = jax.device_count() >= D
+
+        def local(params, graph):
+            # train=False: dropout is the identity, the rng is never consumed
+            slices = make_gnn_stage_slices(
+                model, bounds, widths, graph, jax.random.PRNGKey(0), train=False
+            )
+            zero_wire = jnp.zeros(
+                (graph.features.shape[1], d_travel), graph.features.dtype
+            )
+
+            def idle(operand):
+                return zero_wire
+
+            def fwd(s):
+                def branch(operand):
+                    chunk, h_in = operand
+                    return slices[s](params, chunk, h_in)
+
+                return branch
+
+            branches = [idle] + [fwd(s) for s in range(S)]
+
+            def work_fn(phase, stage, chunk, h_in):
+                index = jnp.where(phase == 0, 0, stage + 1)
+                return lax.switch(index, branches, (chunk, h_in))
+
+            if spmd:
+                return spmd_pipeline_scheduled_eval(
+                    work_fn, lowered, stage_axis="stage", wire_like=zero_wire
+                )
+            return spmd_pipeline_scheduled_eval_lanes(
+                work_fn, lowered, wire_like=zero_wire
+            )
+
+        mesh = None
+        if spmd:
+            mesh = jax.sharding.Mesh(np.array(jax.devices()[:D]), ("stage",))
+            mapped = compat.shard_map(
+                local, mesh=mesh, in_specs=(P(), P()), out_specs=P()
+            )
+        else:
+            mapped = local
+
+        def eval_fn(params, graph, labels, masks):
+            logp = mapped(params, graph)[..., : model.out_dim]
+            nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+            hit = (jnp.argmax(logp, axis=-1) == labels).astype(jnp.float32)
+
+            def masked_mean(x, mask):
+                m = mask.astype(jnp.float32)
+                return jnp.sum(x * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+            return {
+                "train_loss": masked_mean(nll, masks["train"]),
+                "train_acc": masked_mean(hit, masks["train"]),
+                "val_acc": masked_mean(hit, masks["val"]),
+                "test_acc": masked_mean(hit, masks["test"]),
+            }
+
+        return jax.jit(eval_fn), mesh
+
+    def evaluate(self, params: list, plan: MicroBatchPlan) -> dict:
+        """Forward-only compiled inference over the plan's chunks: the same
+        metric dict as ``repro.train.loop.make_eval``, but produced by one
+        jitted scheduled pipeline program instead of a host full-batch
+        apply — so ``--engine compiled`` validation exercises the compiled
+        path end to end. Metrics cover each chunk's core nodes; with a
+        lossless plan (halo, hops >= model depth) they equal the full-batch
+        numbers, with the paper's sequential split they reflect its dropped
+        edges."""
+        stacked = plan.stacked()
+        if self._widths is None:
+            chunk0 = jax.tree_util.tree_map(lambda a: a[0], stacked.graph)
+            self._widths = activation_widths(self.model, params, chunk0)
+        key = (stacked.chunks, stacked.n_pad, stacked.max_deg)
+        entry = self._evals.get(key)
+        if entry is None:
+            entry = self._build_eval(self._widths, stacked.chunks)
+            self._evals[key] = entry
+        fn, mesh = entry
+        if mesh is not None:
+            # the eval ring places one stage per device; params coming out of
+            # a train step whose mesh spans a different device set (e.g. the
+            # interleaved schedule's 2-device ring on a 4-device host) must
+            # be re-replicated onto the eval mesh or jit rejects the mix
+            params = jax.device_put(
+                params, jax.sharding.NamedSharding(mesh, P())
+            )
+        g = stacked.graph
+        masks = {
+            "train": g.train_mask & stacked.core_mask,
+            "val": g.val_mask & stacked.core_mask,
+            "test": g.test_mask & stacked.core_mask,
+        }
+        return fn(params, g, g.labels, masks)
 
     def _travel_inputs(self, stacked):
         """(travel pytree, loss_mask) for one stacked plan, cached. Only the
@@ -651,6 +876,7 @@ class CompiledGNNPipeline(PipelineEngine):
                 # from the replicated feature table, never stashed)
                 stats["measured_peak_live_activations"] = lowered.peak_live_stash
                 stats["stash_slots_per_device"] = lowered.n_fslots
+                stats["w_slots_per_device"] = lowered.n_wslots
         if self._fill_drain:
             return step(
                 params, opt_state, travel, stacked.graph, stacked.graph.labels,

@@ -17,6 +17,19 @@ gap, so the schedule is now an abstraction, not a single function:
     V = S/D *virtual* stages placed round-robin (stage k on device k mod D);
     activations hop device→device circularly. The bubble shrinks by ~V:
     (D-1)/(V·C+D-1) instead of (D-1)/(C+D-1).
+  * ``zb-h1``      — zero-bubble H1 (Qi et al.): the backward is SPLIT into
+    a **B** phase (input-grad — the only part on the pipeline's critical
+    path) and a **W** phase (weight-grad — needed only by the optimizer at
+    the end of the step). B items keep 1F1B's ordering and memory window;
+    W items fill the drain bubble whenever their device would otherwise
+    idle. With unit costs the makespan is 3C + S - 1 ticks for 3C work
+    units per device — the drain bubble all but disappears.
+
+Split-backward timelines use two extra phases: ``bwd_b`` (consumes the
+stashed stage input + downstream cotangent, emits the upstream cotangent
+and a residual) and ``bwd_w`` (consumes the residual, emits the stage's
+parameter gradients). A (stage, chunk) pair either runs the fused ``bwd``
+or BOTH split halves, W strictly after its matching B on the same device.
 
 Every schedule emits a ``WorkItem`` timeline — (tick, stage, chunk, phase,
 device) — consumed generically by the host-driven GNN engine
@@ -47,7 +60,7 @@ class WorkItem:
     tick: int
     stage: int
     chunk: int
-    phase: str  # "fwd" | "bwd"
+    phase: str  # "fwd" | "bwd" (fused) | "bwd_b" (input-grad) | "bwd_w" (weight-grad)
     device: int = -1  # physical device; defaults to == stage (one stage/device)
 
     def __post_init__(self):
@@ -67,63 +80,132 @@ def validate_timeline(
 ) -> None:
     """Raise AssertionError unless ``items`` is a correct pipeline timeline:
 
-    * each (stage, chunk, phase) appears exactly once (2·S·C items total);
-    * no device runs two items in the same tick;
+    * each (stage, chunk, phase) appears exactly once; every (stage, chunk)
+      has its fwd plus EITHER a fused ``bwd`` OR both split halves
+      (``bwd_b`` + ``bwd_w``), never a mix;
+    * no device runs two items in the same tick, and a stage never moves
+      between devices;
     * fwd(s, c) strictly after fwd(s-1, c);
-    * bwd(s, c) strictly after bwd(s+1, c), and after fwd(S-1, c) at the
-      last stage;
-    * bwd(s, c) strictly after fwd(s, c) at EVERY stage, and strictly after
+    * the input-grad tick b(s, c) — the fused bwd or the split bwd_b —
+      strictly after b(s+1, c), and after fwd(S-1, c) at the last stage;
+    * b(s, c) strictly after fwd(s, c) at EVERY stage, and strictly after
       fwd(s+1, c) — a chunk's backward can only start once its forward has
       cleared the stage whose cotangent it consumes. (For a complete
       timeline these follow from the chained checks above, but they are
       asserted directly so a violation is reported at the offending item
       instead of surfacing as a far-away chain inconsistency.)
+    * bwd_w(s, c) strictly after its matching bwd_b(s, c), on the SAME
+      device — the residual it consumes never travels the wire.
     """
     S, C = num_stages, num_chunks
     seen: dict[tuple[int, int, str], int] = {}
+    dev: dict[tuple[int, int, str], int] = {}
     for it in items:
         key = (it.stage, it.chunk, it.phase)
         assert key not in seen, f"duplicate work item {key}"
         assert 0 <= it.stage < S and 0 <= it.chunk < C, it
-        assert it.phase in ("fwd", "bwd"), it
+        assert it.phase in ("fwd", "bwd", "bwd_b", "bwd_w"), it
         seen[key] = it.tick
-    assert len(seen) == 2 * S * C, f"expected {2 * S * C} items, got {len(seen)}"
+        dev[key] = it.device
+    busy = {(it.tick, it.device) for it in items}
+    assert len(busy) == len(items), "a device runs two items in one tick"
+    stage_dev: dict[int, int] = {}
+    for it in items:
+        assert stage_dev.setdefault(it.stage, it.device) == it.device, (
+            it.stage, "stage placed on two devices",
+        )
+
+    n_split = 0
+    for c in range(C):
+        for s in range(S):
+            assert (s, c, "fwd") in seen, (s, c, "missing fwd")
+            fused = (s, c, "bwd") in seen
+            has_b = (s, c, "bwd_b") in seen
+            has_w = (s, c, "bwd_w") in seen
+            assert fused != (has_b or has_w), (
+                s, c, "backward must be fused bwd XOR split bwd_b/bwd_w",
+            )
+            if not fused:
+                assert has_b, (s, c, "bwd_w without a matching bwd_b")
+                assert has_w, (s, c, "bwd_b without a matching bwd_w")
+                assert seen[(s, c, "bwd_w")] > seen[(s, c, "bwd_b")], (
+                    s, c, "W scheduled before its matching B",
+                )
+                assert dev[(s, c, "bwd_w")] == dev[(s, c, "bwd_b")], (
+                    s, c, "W on a different device than its matching B",
+                )
+                n_split += 1
+    assert len(seen) == 2 * S * C + n_split, (
+        f"expected {2 * S * C + n_split} items, got {len(seen)}"
+    )
+
+    def t_b(s, c):  # the input-grad tick: fused bwd or split bwd_b
+        return seen[(s, c, "bwd")] if (s, c, "bwd") in seen else seen[(s, c, "bwd_b")]
+
+    for c in range(C):
+        for s in range(1, S):
+            assert seen[(s, c, "fwd")] > seen[(s - 1, c, "fwd")], (s, c, "fwd dep")
+        assert t_b(S - 1, c) > seen[(S - 1, c, "fwd")], (c, "loss dep")
+        for s in range(S - 1):
+            assert t_b(s, c) > t_b(s + 1, c), (s, c, "bwd dep")
+        # direct cross-phase checks: b(s, c) after its own fwd AND after
+        # the downstream fwd whose cotangent it consumes
+        for s in range(S):
+            assert t_b(s, c) > seen[(s, c, "fwd")], (s, c, "bwd before own fwd")
+        for s in range(S - 1):
+            assert t_b(s, c) > seen[(s + 1, c, "fwd")], (
+                s, c, "bwd before fwd of next stage",
+            )
+
+
+def validate_forward_timeline(
+    items: list[WorkItem], num_stages: int, num_chunks: int
+) -> None:
+    """The inference/eval subset of ``validate_timeline``: forward items
+    only, each (stage, chunk) exactly once, fwd chain respected, no device
+    double-booked."""
+    S, C = num_stages, num_chunks
+    seen: dict[tuple[int, int], int] = {}
+    for it in items:
+        assert it.phase == "fwd", it
+        key = (it.stage, it.chunk)
+        assert key not in seen, f"duplicate forward item {key}"
+        assert 0 <= it.stage < S and 0 <= it.chunk < C, it
+        seen[key] = it.tick
+    assert len(seen) == S * C, f"expected {S * C} items, got {len(seen)}"
     busy = {(it.tick, it.device) for it in items}
     assert len(busy) == len(items), "a device runs two items in one tick"
     for c in range(C):
         for s in range(1, S):
-            assert seen[(s, c, "fwd")] > seen[(s - 1, c, "fwd")], (s, c, "fwd dep")
-        assert seen[(S - 1, c, "bwd")] > seen[(S - 1, c, "fwd")], (c, "loss dep")
-        for s in range(S - 1):
-            assert seen[(s, c, "bwd")] > seen[(s + 1, c, "bwd")], (s, c, "bwd dep")
-        # direct cross-phase checks: bwd(s, c) after its own fwd AND after
-        # the downstream fwd whose cotangent it consumes
-        for s in range(S):
-            assert seen[(s, c, "bwd")] > seen[(s, c, "fwd")], (s, c, "bwd before own fwd")
-        for s in range(S - 1):
-            assert seen[(s, c, "bwd")] > seen[(s + 1, c, "fwd")], (
-                s, c, "bwd before fwd of next stage",
-            )
+            assert seen[(s, c)] > seen[(s - 1, c)], (s, c, "fwd dep")
 
 
 def peak_live_activations(items: list[WorkItem]) -> int:
     """Max simultaneous saved stage-inputs implied by the timeline: the input
     of stage s for chunk c is live from fwd(s, c) until bwd(s, c) consumes it
-    (GPipe re-materializes stage internals, so only stage *inputs* persist)."""
+    (GPipe re-materializes stage internals, so only stage *inputs* persist).
+    For split-backward timelines the input-grad half (``bwd_b``) is the
+    consumer — it moves the input into the W residual, so the activation
+    window matches 1F1B's; ``bwd_w`` touches only the residual stash,
+    accounted separately (``LoweredTimeline.n_wslots``)."""
     live = 0
     peak = 0
     for it in sorted(items, key=_sort_key):
         if it.phase == "fwd":
             live += 1
             peak = max(peak, live)
-        else:
+        elif it.phase in ("bwd", "bwd_b"):
             live -= 1
     return peak
 
 
 # ------------------------------------------ timeline -> index arrays --
 
-PHASE_IDLE, PHASE_FWD, PHASE_BWD = 0, 1, 2
+PHASE_IDLE, PHASE_FWD, PHASE_BWD, PHASE_BWD_B, PHASE_BWD_W = 0, 1, 2, 3, 4
+
+_PHASE_CODE = {
+    "fwd": PHASE_FWD, "bwd": PHASE_BWD, "bwd_b": PHASE_BWD_B, "bwd_w": PHASE_BWD_W,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,10 +227,17 @@ class LoweredTimeline:
       * ``in_fslot``   — where to bank the forward-wire value arriving this
         tick (the upstream stage's output, one ``ppermute`` hop old);
         sacrificial when the arriving value is fill/drain garbage;
-      * ``work_bslot`` — cotangent-stash slot a bwd reads; sacrificial for
-        the last stage (its cotangent comes from the loss) and non-bwd ticks;
+      * ``work_bslot`` — cotangent-stash slot a bwd/bwd_b reads; sacrificial
+        for the last stage (its cotangent comes from the loss) and ticks
+        that consume no cotangent;
       * ``in_bslot``   — where to bank the backward-wire value arriving this
-        tick; sacrificial for garbage.
+        tick; sacrificial for garbage;
+      * ``work_wslot`` — residual-stash slot a ``bwd_w`` reads (the
+        (stage input, applied cotangent) pair its matching ``bwd_b``
+        banked); sacrificial on every other tick;
+      * ``store_wslot`` — residual-stash slot a ``bwd_b`` WRITES after its
+        work (no wire hop: B and W run on the same device); sacrificial on
+        every other tick.
 
     Slots are assigned by a free-list simulation over the timeline, so
     ``n_fslots`` is the schedule's real per-device activation window (1F1B's
@@ -171,8 +260,11 @@ class LoweredTimeline:
     in_fslot: np.ndarray
     work_bslot: np.ndarray
     in_bslot: np.ndarray
+    work_wslot: np.ndarray
+    store_wslot: np.ndarray
     n_fslots: int
     n_bslots: int
+    n_wslots: int
     peak_live_stash: int
 
 
@@ -201,7 +293,11 @@ def _alloc_slots(entries):
 
 
 def lower_timeline(
-    items: list[WorkItem], num_stages: int, num_chunks: int
+    items: list[WorkItem],
+    num_stages: int,
+    num_chunks: int,
+    *,
+    forward_only: bool = False,
 ) -> LoweredTimeline:
     """Lower a validated timeline to the per-tick index arrays of
     ``LoweredTimeline``.
@@ -211,11 +307,27 @@ def lower_timeline(
     of stage s (device_of(s+1) == (device_of(s) + 1) % D) so a single
     forward ring (and its transpose for cotangents) carries every edge of
     the pipeline DAG. All shipped schedules (fill-drain, 1F1B, interleaved
-    round-robin placement) satisfy this; a custom placement that does not
-    raises ``ValueError`` here instead of silently mis-routing activations.
+    round-robin placement, zb-h1) satisfy this; a custom placement that does
+    not raises ``ValueError`` here instead of silently mis-routing
+    activations.
+
+    Split-backward timelines additionally get a W residual-slot free-list:
+    ``bwd_b(s, c)`` banks its residual into ``store_wslot`` and the matching
+    ``bwd_w(s, c)`` reads it back through ``work_wslot``; slot reuse
+    respects the residual's [B-tick, W-tick] live window exactly like the
+    activation stash does, so ``n_wslots`` is the schedule's real deferred-W
+    window, not C.
+
+    ``forward_only=True`` lowers an inference/eval timeline (fwd items
+    only, validated by ``validate_forward_timeline``): each banked stage
+    input is released by its own forward, so the stash collapses to the
+    wire-slack window (one slot per device for fill-drain forwards).
     """
-    validate_timeline(items, num_stages, num_chunks)
     S, C = num_stages, num_chunks
+    if forward_only:
+        validate_forward_timeline(items, S, C)
+    else:
+        validate_timeline(items, S, C)
 
     dev_of: dict[int, int] = {}
     for it in items:
@@ -231,27 +343,43 @@ def lower_timeline(
             )
 
     t_f: dict[tuple[int, int], int] = {}
-    t_b: dict[tuple[int, int], int] = {}
+    t_b: dict[tuple[int, int], int] = {}  # input-grad tick: fused bwd or bwd_b
+    t_w: dict[tuple[int, int], int] = {}
     for it in items:
-        (t_f if it.phase == "fwd" else t_b)[(it.stage, it.chunk)] = it.tick
+        key = (it.stage, it.chunk)
+        if it.phase == "fwd":
+            t_f[key] = it.tick
+        elif it.phase == "bwd_w":
+            t_w[key] = it.tick
+        else:  # "bwd" | "bwd_b"
+            t_b[key] = it.tick
     T = max(it.tick for it in items) + 1
 
     # forward stash: stage s >= 1's input for chunk c is banked on arrival
-    # (one tick after fwd(s-1, c) put it on the wire) and freed once
-    # bwd(s, c) has re-materialized from it
+    # (one tick after fwd(s-1, c) put it on the wire) and freed once the
+    # input-grad item — fused bwd or bwd_b — has re-materialized from it
+    # (forward-only: freed by its own fwd read)
     f_entries: dict[int, list] = {d: [] for d in range(D)}
     b_entries: dict[int, list] = {d: [] for d in range(D)}
+    w_entries: dict[int, list] = {d: [] for d in range(D)}
     for c in range(C):
         for s in range(1, S):
-            f_entries[dev_of[s]].append((t_f[(s - 1, c)] + 1, t_b[(s, c)], (s, c)))
-        for s in range(S - 1):
-            # cotangent of stage s's output: produced by bwd(s+1, c), read
-            # (and freed) by bwd(s, c)
-            b_entries[dev_of[s]].append((t_b[(s + 1, c)] + 1, t_b[(s, c)], (s, c)))
+            release = t_f[(s, c)] if forward_only else t_b[(s, c)]
+            f_entries[dev_of[s]].append((t_f[(s - 1, c)] + 1, release, (s, c)))
+        if not forward_only:
+            for s in range(S - 1):
+                # cotangent of stage s's output: produced by the input-grad
+                # item of (s+1, c), read (and freed) by that of (s, c)
+                b_entries[dev_of[s]].append((t_b[(s + 1, c)] + 1, t_b[(s, c)], (s, c)))
+            for s in range(S):
+                if (s, c) in t_w:
+                    # residual written at the B tick, consumed at the W tick
+                    w_entries[dev_of[s]].append((t_b[(s, c)], t_w[(s, c)], (s, c)))
 
     f_slot: dict[tuple[int, int], int] = {}
     b_slot: dict[tuple[int, int], int] = {}
-    n_fslots = n_bslots = 0
+    w_slot: dict[tuple[int, int], int] = {}
+    n_fslots = n_bslots = n_wslots = 0
     for d in range(D):
         arrivals = {a for a, _, _ in f_entries[d]}
         if len(arrivals) != len(f_entries[d]):
@@ -265,6 +393,9 @@ def lower_timeline(
         slots, n = _alloc_slots(b_entries[d])
         b_slot.update(slots)
         n_bslots = max(n_bslots, n)
+        slots, n = _alloc_slots(w_entries[d])
+        w_slot.update(slots)
+        n_wslots = max(n_wslots, n)
 
     phase = np.full((T, D), PHASE_IDLE, dtype=np.int32)
     stage = np.zeros((T, D), dtype=np.int32)
@@ -273,15 +404,22 @@ def lower_timeline(
     in_fslot = np.full((T, D), n_fslots, dtype=np.int32)
     work_bslot = np.full((T, D), n_bslots, dtype=np.int32)
     in_bslot = np.full((T, D), n_bslots, dtype=np.int32)
+    work_wslot = np.full((T, D), n_wslots, dtype=np.int32)
+    store_wslot = np.full((T, D), n_wslots, dtype=np.int32)
 
     for it in items:
-        phase[it.tick, it.device] = PHASE_FWD if it.phase == "fwd" else PHASE_BWD
+        key = (it.stage, it.chunk)
+        phase[it.tick, it.device] = _PHASE_CODE[it.phase]
         stage[it.tick, it.device] = it.stage
         chunk[it.tick, it.device] = it.chunk
-        if it.stage > 0:
-            work_fslot[it.tick, it.device] = f_slot[(it.stage, it.chunk)]
-        if it.phase == "bwd" and it.stage < S - 1:
-            work_bslot[it.tick, it.device] = b_slot[(it.stage, it.chunk)]
+        if it.stage > 0 and it.phase in ("fwd", "bwd", "bwd_b"):
+            work_fslot[it.tick, it.device] = f_slot[key]
+        if it.phase in ("bwd", "bwd_b") and it.stage < S - 1:
+            work_bslot[it.tick, it.device] = b_slot[key]
+        if it.phase == "bwd_b":
+            store_wslot[it.tick, it.device] = w_slot[key]
+        if it.phase == "bwd_w":
+            work_wslot[it.tick, it.device] = w_slot[key]
     for d in range(D):
         for arrival, _, (s, c) in f_entries[d]:
             in_fslot[arrival, d] = f_slot[(s, c)]
@@ -308,8 +446,11 @@ def lower_timeline(
         in_fslot=in_fslot,
         work_bslot=work_bslot,
         in_bslot=in_bslot,
+        work_wslot=work_wslot,
+        store_wslot=store_wslot,
         n_fslots=n_fslots,
         n_bslots=n_bslots,
+        n_wslots=n_wslots,
         peak_live_stash=peak,
     )
 
@@ -477,12 +618,13 @@ class Schedule(abc.ABC):
         return max(it.tick for it in self.timeline(num_stages, num_chunks)) + 1
 
     def bubble_fraction(self, num_stages: int, num_chunks: int) -> float:
-        """Idle fraction across devices for the unit-cost timeline: each of
-        the D devices owns 2·S·C/D unit ops out of D·T tick-slots."""
-        T = self.ticks(num_stages, num_chunks)
+        """Idle fraction across devices for the unit-cost timeline: the
+        timeline's unit work items (2·S·C fused, 3·S·C split-backward) out
+        of D·T tick-slots."""
+        tl = self.timeline(num_stages, num_chunks)
+        T = max(it.tick for it in tl) + 1
         D = self.num_devices(num_stages)
-        work = 2 * num_stages * num_chunks
-        return 1.0 - work / (D * T)
+        return 1.0 - len(tl) / (D * T)
 
     def peak_live_activations(self, num_stages: int, num_chunks: int) -> int:
         return peak_live_activations(self.timeline(num_stages, num_chunks))
@@ -670,9 +812,96 @@ class InterleavedSchedule(Schedule):
         return self._ops(S, C, f, b)
 
 
+class ZeroBubbleH1Schedule(Schedule):
+    """Zero-bubble H1 (Qi et al., 2023): the backward splits into B
+    (input-grad — the only half on the inter-stage critical path) and W
+    (weight-grad — needed only by the end-of-step optimizer update). The B
+    stream keeps 1F1B's ordering and its min(S-s, C) activation window (B
+    frees the stage input into the W residual), while W items fill ticks
+    their device would otherwise idle through — the drain bubble becomes W
+    work. Emitted via a greedy list scheduler with per-device priority
+    B > F > W; with unit costs the makespan is 3C + S - 1 ticks for 3C unit
+    ops per device, so the bubble drops to (S-1)/(3C+S-1) — strictly below
+    1F1B's (S-1)/(C+S-1) whenever there is a bubble at all."""
+
+    name = "zb-h1"
+
+    def _ops(self, S, C, f=1.0, b=1.0, w=1.0):
+        done: dict[tuple[int, int, str], tuple[float, float]] = {}
+        nxt = {"fwd": [0] * S, "bwd_b": [0] * S, "bwd_w": [0] * S}
+        free = {s: 0.0 for s in range(S)}  # device == stage
+        cost = {"fwd": f, "bwd_b": b, "bwd_w": w}
+        n_total = 3 * S * C
+        while len(done) < n_total:
+            best = None
+            for s in range(S):
+                # candidate B (priority 0: the drain's critical path)
+                c = nxt["bwd_b"][s]
+                if c < C:
+                    deps = [(s, c, "fwd")]
+                    deps.append((S - 1, c, "fwd") if s == S - 1 else (s + 1, c, "bwd_b"))
+                    if all(d in done for d in deps):
+                        start = max([free[s]] + [done[d][1] for d in deps])
+                        cand = ((start, 0, s, c), s, c, "bwd_b")
+                        if best is None or cand[0] < best[0]:
+                            best = cand
+                # candidate F (priority 1), 1F1B's S - s in-flight window —
+                # the window dep is on B: the input-grad half frees the slot
+                c = nxt["fwd"][s]
+                if c < C:
+                    deps = []
+                    if s > 0:
+                        deps.append((s - 1, c, "fwd"))
+                    if c - (S - s) >= 0:
+                        deps.append((s, c - (S - s), "bwd_b"))
+                    if all(d in done for d in deps):
+                        start = max([free[s]] + [done[d][1] for d in deps])
+                        cand = ((start, 1, s, c), s, c, "fwd")
+                        if best is None or cand[0] < best[0]:
+                            best = cand
+                # candidate W (priority 2: pure bubble filler)
+                c = nxt["bwd_w"][s]
+                if c < C and (s, c, "bwd_b") in done:
+                    start = max(free[s], done[(s, c, "bwd_b")][1])
+                    cand = ((start, 2, s, c), s, c, "bwd_w")
+                    if best is None or cand[0] < best[0]:
+                        best = cand
+            assert best is not None, "zb-h1 scheduler stalled (dependency cycle?)"
+            (start, _, _, _), s, c, phase = best
+            done[(s, c, phase)] = (start, start + cost[phase])
+            free[s] = start + cost[phase]
+            nxt[phase][s] += 1
+        makespan = max(end for _, end in done.values())
+        return done, makespan
+
+    def timeline(self, num_stages: int, num_chunks: int) -> list[WorkItem]:
+        ops, _ = self._ops(num_stages, num_chunks)
+        return _ops_to_items(ops, lambda s: s)
+
+    def predicted_step_time(
+        self,
+        num_stages: int,
+        num_chunks: int,
+        *,
+        fwd_cost_per_chunk: float,
+        bwd_cost_per_chunk: float,
+        transfer_cost: float = 0.0,
+        rebuild_cost_per_chunk: float = 0.0,
+    ) -> float:
+        # the fused backward's COMPUTE splits evenly across the B and W
+        # halves, but the wire hop belongs to B alone — W consumes a local
+        # residual and sends nothing, so it carries no transfer term
+        S, C = num_stages, num_chunks
+        f = fwd_cost_per_chunk / S + transfer_cost
+        b = bwd_cost_per_chunk / S * 0.5 + transfer_cost
+        w = bwd_cost_per_chunk / S * 0.5
+        _, makespan = self._ops(S, C, f, b, w)
+        return makespan + C * rebuild_cost_per_chunk
+
+
 # -------------------------------------------------------------- registry --
 
-SCHEDULES = ("fill_drain", "gpipe", "1f1b", "interleaved")
+SCHEDULES = ("fill_drain", "gpipe", "1f1b", "interleaved", "zb-h1")
 
 
 def get_schedule(name: str, *, num_devices: int | None = None) -> Schedule:
@@ -683,6 +912,8 @@ def get_schedule(name: str, *, num_devices: int | None = None) -> Schedule:
         return FillDrainSchedule()
     if name == "1f1b":
         return OneFOneBSchedule()
+    if name in ("zb-h1", "zb_h1"):
+        return ZeroBubbleH1Schedule()
     if name == "interleaved":
         if num_devices is None:
             raise ValueError("interleaved schedule requires num_devices")
@@ -695,6 +926,17 @@ def get_schedule(name: str, *, num_devices: int | None = None) -> Schedule:
 
 def fill_drain_timeline(num_stages: int, num_chunks: int) -> list[WorkItem]:
     return FillDrainSchedule().timeline(num_stages, num_chunks)
+
+
+def forward_timeline(num_stages: int, num_chunks: int) -> list[WorkItem]:
+    """Inference/eval timeline: the fill-drain forward wave only (stage s
+    runs chunk c at tick c + s; C + S - 1 ticks, no backward). Lower with
+    ``lower_timeline(..., forward_only=True)`` for the compiled eval path."""
+    return [
+        it
+        for it in FillDrainSchedule().timeline(num_stages, num_chunks)
+        if it.phase == "fwd"
+    ]
 
 
 def bubble_fraction(num_stages: int, num_chunks: int) -> float:

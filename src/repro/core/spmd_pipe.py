@@ -8,9 +8,13 @@ stage→stage over the mesh's ``stage_axis``. Three executors ship:
 scan), ``spmd_pipeline_interleaved`` (circular placement, V virtual stages
 per device — the bubble shrinks by ~V; see ``repro.core.schedule``), and
 ``spmd_pipeline_scheduled`` (any validated ``WorkItem`` timeline — 1F1B /
-interleaved 1F1B — lowered to static per-tick index arrays, mixed fwd/bwd
-ticks with explicit ``jax.vjp`` backward stages and an activation stash
-sized to the schedule's live window instead of S·C).
+interleaved 1F1B / zero-bubble zb-h1 with its split B/W backward and
+deferred-weight-grad residual stash — lowered to static per-tick index
+arrays, mixed fwd/bwd ticks with explicit ``jax.vjp`` backward stages and
+an activation stash sized to the schedule's live window instead of S·C).
+``spmd_pipeline_scheduled_eval`` is the forward-only twin (compiled
+inference/eval: no vjp, no gradient buffers); every scheduled executor has
+a ``_lanes`` substrate for hosts with fewer devices than the placement.
 
 Contract (everything below happens *inside* shard_map):
 
@@ -249,30 +253,42 @@ def spmd_pipeline_scheduled(
     ``(phase, stage, chunk, slot)`` index arrays baked into the program as
     constants; each device reads its column via ``lax.axis_index``.
 
-    ``work_fn(phase, stage, chunk, h_in, ct) -> (y, d_h, grads, loss_sum,
-    count)`` executes one work item (all five args traced scalars/arrays):
+    ``work_fn(phase, stage, chunk, h_in, ct, w_res) -> (y, d_h, w_out,
+    grads, loss_sum, count)`` executes one work item (all six args traced
+    scalars/arrays; ``w_res``/``w_out`` are residual PAIRS of wire-shaped
+    buffers — the banked stage input and the applied cotangent — stashed as
+    two parallel single-wire stashes so no per-tick concat materializes):
 
       * fwd: ``y`` is the stage output (uniform wire shape); everything else
         must be zeros;
-      * bwd: ``d_h`` is the cotangent for the upstream stage's output and
-        ``grads`` this item's parameter gradients (full-params pytree, zero
-        outside the stage's layers — a ``jax.vjp`` of the stage wrt the full
-        params gives exactly that). The LAST stage derives its own cotangent
-        from the loss and reports (loss_sum, count); other stages consume
-        the banked ``ct`` and report zeros;
+      * bwd (fused): ``d_h`` is the cotangent for the upstream stage's
+        output and ``grads`` this item's parameter gradients (full-params
+        pytree, zero outside the stage's layers — a ``jax.vjp`` of the stage
+        wrt the full params gives exactly that). The LAST stage derives its
+        own cotangent from the loss and reports (loss_sum, count); other
+        stages consume the banked ``ct`` and report zeros;
+      * bwd_b (zero-bubble input-grad half): like bwd but ``grads`` stays
+        zero; instead ``w_out`` carries the residual — the banked stage
+        input and the applied cotangent — for the matching deferred W item;
+      * bwd_w (deferred weight-grad half): consumes ``w_res`` from the
+        residual stash, emits only ``grads``;
       * idle: all-zeros.
 
     Dataflow per tick: bank the two arriving wire values (forward ring hop
     carries activations, its transpose carries cotangents) into the stash
-    slots the lowering assigned, read the work item's input/cotangent slots,
-    run ``work_fn``, accumulate ``grads`` into the item's *per-chunk* slot,
-    and ``ppermute`` the outputs. Fill/drain garbage routes to sacrificial
-    slots — the same trick as ``spmd_pipeline``'s state writes.
+    slots the lowering assigned, read the work item's input/cotangent/
+    residual slots, run ``work_fn``, store ``w_out`` into the B item's
+    residual slot (``store_wslot`` — no wire hop, B and W share a device),
+    accumulate ``grads`` into the item's *per-chunk* slot, and ``ppermute``
+    the outputs. Fill/drain garbage routes to sacrificial slots — the same
+    trick as ``spmd_pipeline``'s state writes.
 
     The activation stash holds ``n_fslots`` slots — the schedule's real
     per-device live-activation window (1F1B's min(S-s, C) memory lever),
     not the fill-drain C — and backward runs *explicitly* (no AD through the
-    scan), so no per-tick residuals accumulate either.
+    scan), so no per-tick residuals accumulate either. The W residual stash
+    (``n_wslots`` slots, empty for fused-backward schedules) is the
+    zero-bubble schedule's deferred-W window.
 
     Gradients are accumulated per chunk and reduced AFTER the scan in the
     canonical descending-chunk order (the fill-drain drain order the host
@@ -281,6 +297,7 @@ def spmd_pipeline_scheduled(
     ``stage_axis`` (each device contributes exactly its stages' layer
     gradients, zeros elsewhere).
     """
+    from repro.core.schedule import PHASE_BWD, PHASE_BWD_W
     from repro.core.vma import match_vma
 
     C = lowered.num_chunks
@@ -291,7 +308,7 @@ def spmd_pipeline_scheduled(
     idx = {
         name: jnp.asarray(getattr(lowered, name))
         for name in ("phase", "stage", "chunk", "work_fslot", "in_fslot",
-                     "work_bslot", "in_bslot")
+                     "work_bslot", "in_bslot", "work_wslot", "store_wslot")
     }
 
     def pick(name, t):
@@ -301,24 +318,46 @@ def spmd_pipeline_scheduled(
     zero_wire = jnp.zeros_like(wire_like)
     fstash0 = jnp.zeros((lowered.n_fslots + 1,) + wire_like.shape, wire_like.dtype)
     bstash0 = jnp.zeros((lowered.n_bslots + 1,) + wire_like.shape, wire_like.dtype)
+    wstash0 = tuple(
+        jnp.zeros((lowered.n_wslots + 1,) + wire_like.shape, wire_like.dtype)
+        for _ in range(2)
+    )
     gbuf0 = tree_map(lambda p: jnp.zeros((C + 1,) + p.shape, p.dtype), grads_like)
     fwd_perm = [(i, (i + 1) % D) for i in range(D)]
     bwd_perm = [(i, (i - 1) % D) for i in range(D)]
 
     def tick_body(carry, t):
-        wire_f, wire_b, fstash, bstash, gbuf, loss, count = carry
+        wire_f, wire_b, fstash, bstash, wstash, gbuf, loss, count = carry
         # bank arrivals BEFORE the work reads (same-tick deliver-then-consume)
         fstash = lax.dynamic_update_index_in_dim(fstash, wire_f, pick("in_fslot", t), 0)
         bstash = lax.dynamic_update_index_in_dim(bstash, wire_b, pick("in_bslot", t), 0)
         h_in = lax.dynamic_index_in_dim(fstash, pick("work_fslot", t), 0, keepdims=False)
         ct_in = lax.dynamic_index_in_dim(bstash, pick("work_bslot", t), 0, keepdims=False)
+        # fused-backward schedules allocate no residual slots; skip the
+        # wire-sized stash reads/writes entirely on their hot path
+        if lowered.n_wslots:
+            w_res = tuple(
+                lax.dynamic_index_in_dim(w, pick("work_wslot", t), 0, keepdims=False)
+                for w in wstash
+            )
+        else:
+            w_res = (zero_wire, zero_wire)
         phase = pick("phase", t)
-        y, d_h, grads, loss_sum, cnt = work_fn(
-            phase, pick("stage", t), pick("chunk", t), h_in, ct_in
+        y, d_h, w_out, grads, loss_sum, cnt = work_fn(
+            phase, pick("stage", t), pick("chunk", t), h_in, ct_in, w_res
         )
-        # per-chunk gradient slots (sacrificial slot C on non-bwd ticks):
-        # slice-sized read+write per tick, reduced canonically after the scan
-        gc = jnp.where(phase == 2, pick("chunk", t), C)
+        if lowered.n_wslots:
+            # a B tick banks its residual for the matching deferred W (the
+            # read above precedes this write, so slot reuse inside a tick is
+            # safe)
+            wstash = tuple(
+                lax.dynamic_update_index_in_dim(w, v, pick("store_wslot", t), 0)
+                for w, v in zip(wstash, w_out)
+            )
+        # per-chunk gradient slots (sacrificial slot C on ticks that produce
+        # no parameter gradients — fwd, bwd_b, idle): slice-sized read+write
+        # per tick, reduced canonically after the scan
+        gc = jnp.where((phase == PHASE_BWD) | (phase == PHASE_BWD_W), pick("chunk", t), C)
         gslot = tree_map(
             lambda b: lax.dynamic_index_in_dim(b, gc, 0, keepdims=False), gbuf
         )
@@ -328,14 +367,17 @@ def spmd_pipeline_scheduled(
         )
         wire_f = lax.ppermute(y, stage_axis, perm=fwd_perm)
         wire_b = lax.ppermute(d_h, stage_axis, perm=bwd_perm)
-        return (wire_f, wire_b, fstash, bstash, gbuf, loss + loss_sum, count + cnt), None
+        return (
+            wire_f, wire_b, fstash, bstash, wstash, gbuf,
+            loss + loss_sum, count + cnt,
+        ), None
 
     carry0 = (
-        zero_wire, zero_wire, fstash0, bstash0, gbuf0,
+        zero_wire, zero_wire, fstash0, bstash0, wstash0, gbuf0,
         jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
     )
     carry0 = match_vma(carry0, grads_like, vma_refs, extra=(stage_axis,))
-    (_, _, _, _, gbuf, loss, count), _ = lax.scan(tick_body, carry0, jnp.arange(T))
+    (_, _, _, _, _, gbuf, loss, count), _ = lax.scan(tick_body, carry0, jnp.arange(T))
 
     # canonical reduction: per layer, chunks in DESCENDING order — the host
     # engine's fill-drain drain order — so floats accumulate identically no
@@ -357,8 +399,9 @@ def spmd_pipeline_scheduled_lanes(
     grads_like: Any,
 ):
     """Sub-device-count substrate of ``spmd_pipeline_scheduled``: the same
-    per-tick dataflow with the device ring as a leading LANE axis inside one
-    program — ``ppermute`` becomes ``jnp.roll`` over lanes, psum a plain sum.
+    per-tick dataflow with the device ring as per-LANE carries inside one
+    program — ``ppermute`` becomes a static rotation of the lane tuple,
+    psum a plain sum.
 
     The lane loop is a static Python loop, so each lane's ``lax.switch``
     dispatch stays a real XLA conditional executing ONE branch per tick.
@@ -370,6 +413,8 @@ def spmd_pipeline_scheduled_lanes(
     gradient reduction — per (layer, chunk) slot exactly one lane ever
     contributes, so the shared gradient buffer accumulates the same floats
     the psum would."""
+    from repro.core.schedule import PHASE_BWD, PHASE_BWD_W
+
     C = lowered.num_chunks
     T, D = lowered.num_ticks, lowered.num_devices
     tree_map = jax.tree_util.tree_map
@@ -377,37 +422,77 @@ def spmd_pipeline_scheduled_lanes(
     idx = {
         name: jnp.asarray(getattr(lowered, name))
         for name in ("phase", "stage", "chunk", "work_fslot", "in_fslot",
-                     "work_bslot", "in_bslot")
+                     "work_bslot", "in_bslot", "work_wslot", "store_wslot")
     }
 
     def pick(name, t, d):  # d is a static lane index
         row = lax.dynamic_index_in_dim(idx[name], t, 0, keepdims=False)
         return row[d]
 
-    wires0 = jnp.zeros((D,) + wire_like.shape, wire_like.dtype)
-    fstash0 = jnp.zeros((D, lowered.n_fslots + 1) + wire_like.shape, wire_like.dtype)
-    bstash0 = jnp.zeros((D, lowered.n_bslots + 1) + wire_like.shape, wire_like.dtype)
+    # per-LANE stash tuples, not one (D, ...) stacked array: a stacked stash
+    # would need a chained ``.at[d].set`` per lane per tick, which XLA
+    # materializes as whole-stash copies — measured 1.6x step time on the
+    # zb-h1 residual stash. Tuple carries keep every lane's update a single
+    # in-place dynamic-update-slice.
+    zero_wire = jnp.zeros_like(wire_like)
+    wires0 = (zero_wire,) * D
+    fstash0 = tuple(
+        jnp.zeros((lowered.n_fslots + 1,) + wire_like.shape, wire_like.dtype)
+        for _ in range(D)
+    )
+    bstash0 = tuple(
+        jnp.zeros((lowered.n_bslots + 1,) + wire_like.shape, wire_like.dtype)
+        for _ in range(D)
+    )
+    wstash0 = tuple(
+        tuple(
+            jnp.zeros((lowered.n_wslots + 1,) + wire_like.shape, wire_like.dtype)
+            for _ in range(2)
+        )
+        for _ in range(D)
+    )
     gbuf0 = tree_map(lambda p: jnp.zeros((C + 1,) + p.shape, p.dtype), grads_like)
 
     def tick_body(carry, t):
-        wire_f, wire_b, fstash, bstash, gbuf, loss, count = carry
+        wire_f, wire_b, fstash, bstash, wstash, gbuf, loss, count = carry
+        fstash, bstash, wstash = list(fstash), list(bstash), list(wstash)
         ys, dhs = [], []
         for d in range(D):  # static: one single-branch dispatch per lane
-            f_d = lax.dynamic_update_index_in_dim(
+            fstash[d] = lax.dynamic_update_index_in_dim(
                 fstash[d], wire_f[d], pick("in_fslot", t, d), 0
             )
-            b_d = lax.dynamic_update_index_in_dim(
+            bstash[d] = lax.dynamic_update_index_in_dim(
                 bstash[d], wire_b[d], pick("in_bslot", t, d), 0
             )
-            fstash = fstash.at[d].set(f_d)
-            bstash = bstash.at[d].set(b_d)
-            h_in = lax.dynamic_index_in_dim(f_d, pick("work_fslot", t, d), 0, keepdims=False)
-            ct_in = lax.dynamic_index_in_dim(b_d, pick("work_bslot", t, d), 0, keepdims=False)
-            phase = pick("phase", t, d)
-            y, d_h, grads, loss_sum, cnt = work_fn(
-                phase, pick("stage", t, d), pick("chunk", t, d), h_in, ct_in
+            h_in = lax.dynamic_index_in_dim(
+                fstash[d], pick("work_fslot", t, d), 0, keepdims=False
             )
-            gc = jnp.where(phase == 2, pick("chunk", t, d), C)
+            ct_in = lax.dynamic_index_in_dim(
+                bstash[d], pick("work_bslot", t, d), 0, keepdims=False
+            )
+            if lowered.n_wslots:
+                w_res = tuple(
+                    lax.dynamic_index_in_dim(
+                        w, pick("work_wslot", t, d), 0, keepdims=False
+                    )
+                    for w in wstash[d]
+                )
+            else:  # fused-backward schedule: no residual traffic at all
+                w_res = (zero_wire, zero_wire)
+            phase = pick("phase", t, d)
+            y, d_h, w_out, grads, loss_sum, cnt = work_fn(
+                phase, pick("stage", t, d), pick("chunk", t, d), h_in, ct_in, w_res
+            )
+            if lowered.n_wslots:
+                wstash[d] = tuple(
+                    lax.dynamic_update_index_in_dim(
+                        w, v, pick("store_wslot", t, d), 0
+                    )
+                    for w, v in zip(wstash[d], w_out)
+                )
+            gc = jnp.where(
+                (phase == PHASE_BWD) | (phase == PHASE_BWD_W), pick("chunk", t, d), C
+            )
             gslot = tree_map(
                 lambda b: lax.dynamic_index_in_dim(b, gc, 0, keepdims=False), gbuf
             )
@@ -419,19 +504,140 @@ def spmd_pipeline_scheduled_lanes(
             ys.append(y)
             dhs.append(d_h)
         # the ring hops: lane d's activation to lane d+1, cotangent to d-1
-        wire_f = jnp.roll(jnp.stack(ys), 1, axis=0)
-        wire_b = jnp.roll(jnp.stack(dhs), -1, axis=0)
-        return (wire_f, wire_b, fstash, bstash, gbuf, loss, count), None
+        wire_f = tuple(ys[(d - 1) % D] for d in range(D))
+        wire_b = tuple(dhs[(d + 1) % D] for d in range(D))
+        return (
+            wire_f, wire_b, tuple(fstash), tuple(bstash), tuple(wstash),
+            gbuf, loss, count,
+        ), None
 
     carry0 = (
-        wires0, wires0, fstash0, bstash0, gbuf0,
+        wires0, wires0, fstash0, bstash0, wstash0, gbuf0,
         jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
     )
-    (_, _, _, _, gbuf, loss, count), _ = lax.scan(tick_body, carry0, jnp.arange(T))
+    (_, _, _, _, _, gbuf, loss, count), _ = lax.scan(tick_body, carry0, jnp.arange(T))
     grads = tree_map(lambda b: jnp.zeros(b.shape[1:], b.dtype), gbuf)
     for c in reversed(range(C)):  # canonical: the fill-drain drain order
         grads = tree_map(lambda g, b, c=c: g + b[c], grads, gbuf)
     return grads, loss, count
+
+
+def _eval_out_slot(lowered):
+    """Per-tick output-buffer slot: last-stage forward ticks write their
+    chunk's result, everything else routes to the sacrificial slot C."""
+    import numpy as np
+
+    from repro.core.schedule import PHASE_FWD
+
+    last = (lowered.phase == PHASE_FWD) & (lowered.stage == lowered.num_stages - 1)
+    return np.where(last, lowered.chunk, lowered.num_chunks).astype(np.int32)
+
+
+def spmd_pipeline_scheduled_eval(
+    work_fn: Callable[..., jax.Array],
+    lowered,
+    *,
+    stage_axis: str,
+    wire_like: jax.Array,
+    vma_refs: tuple = (),
+):
+    """Forward-only twin of ``spmd_pipeline_scheduled`` — the compiled
+    eval/inference path. Runs a ``forward_only`` ``LoweredTimeline`` (see
+    ``repro.core.schedule.forward_timeline``): no vjp, no cotangent wire, no
+    gradient buffers — just the activation ring, a stash collapsed to the
+    wire-slack window (one slot for fill-drain forwards), and an output
+    buffer collecting the LAST stage's per-chunk results.
+
+    ``work_fn(phase, stage, chunk, h_in) -> y`` runs one forward item (idle
+    ticks must return zeros). Returns the (num_chunks, *wire) outputs,
+    psum-replicated over ``stage_axis`` (exactly one device writes each
+    chunk — the one hosting the last stage)."""
+    from repro.core.vma import match_vma
+
+    C = lowered.num_chunks
+    T, D = lowered.num_ticks, lowered.num_devices
+    d = lax.axis_index(stage_axis)
+
+    idx = {
+        name: jnp.asarray(getattr(lowered, name))
+        for name in ("phase", "stage", "chunk", "work_fslot", "in_fslot")
+    }
+    idx["out_slot"] = jnp.asarray(_eval_out_slot(lowered))
+
+    def pick(name, t):
+        row = lax.dynamic_index_in_dim(idx[name], t, 0, keepdims=False)
+        return lax.dynamic_index_in_dim(row, d, 0, keepdims=False)
+
+    zero_wire = jnp.zeros_like(wire_like)
+    fstash0 = jnp.zeros((lowered.n_fslots + 1,) + wire_like.shape, wire_like.dtype)
+    out0 = jnp.zeros((C + 1,) + wire_like.shape, wire_like.dtype)
+    fwd_perm = [(i, (i + 1) % D) for i in range(D)]
+
+    def tick_body(carry, t):
+        wire_f, fstash, out = carry
+        fstash = lax.dynamic_update_index_in_dim(fstash, wire_f, pick("in_fslot", t), 0)
+        h_in = lax.dynamic_index_in_dim(fstash, pick("work_fslot", t), 0, keepdims=False)
+        y = work_fn(pick("phase", t), pick("stage", t), pick("chunk", t), h_in)
+        out = lax.dynamic_update_index_in_dim(out, y, pick("out_slot", t), 0)
+        wire_f = lax.ppermute(y, stage_axis, perm=fwd_perm)
+        return (wire_f, fstash, out), None
+
+    carry0 = match_vma((zero_wire, fstash0, out0), vma_refs, extra=(stage_axis,))
+    (_, _, out), _ = lax.scan(tick_body, carry0, jnp.arange(T))
+    return lax.psum(out[:C], stage_axis)
+
+
+def spmd_pipeline_scheduled_eval_lanes(
+    work_fn: Callable[..., jax.Array],
+    lowered,
+    *,
+    wire_like: jax.Array,
+):
+    """Sub-device-count substrate of ``spmd_pipeline_scheduled_eval``: the
+    ring as a static lane loop inside one program (same trade-offs as
+    ``spmd_pipeline_scheduled_lanes`` — every ``lax.switch`` stays a
+    single-branch conditional). The output buffer is shared across lanes;
+    only the last-stage lane ever writes a real slot."""
+    C = lowered.num_chunks
+    T, D = lowered.num_ticks, lowered.num_devices
+
+    idx = {
+        name: jnp.asarray(getattr(lowered, name))
+        for name in ("phase", "stage", "chunk", "work_fslot", "in_fslot")
+    }
+    idx["out_slot"] = jnp.asarray(_eval_out_slot(lowered))
+
+    def pick(name, t, d):
+        row = lax.dynamic_index_in_dim(idx[name], t, 0, keepdims=False)
+        return row[d]
+
+    zero_wire = jnp.zeros_like(wire_like)
+    wires0 = (zero_wire,) * D
+    fstash0 = tuple(
+        jnp.zeros((lowered.n_fslots + 1,) + wire_like.shape, wire_like.dtype)
+        for _ in range(D)
+    )
+    out0 = jnp.zeros((C + 1,) + wire_like.shape, wire_like.dtype)
+
+    def tick_body(carry, t):
+        wire_f, fstash, out = carry
+        fstash = list(fstash)
+        ys = []
+        for d in range(D):
+            fstash[d] = lax.dynamic_update_index_in_dim(
+                fstash[d], wire_f[d], pick("in_fslot", t, d), 0
+            )
+            h_in = lax.dynamic_index_in_dim(
+                fstash[d], pick("work_fslot", t, d), 0, keepdims=False
+            )
+            y = work_fn(pick("phase", t, d), pick("stage", t, d), pick("chunk", t, d), h_in)
+            out = lax.dynamic_update_index_in_dim(out, y, pick("out_slot", t, d), 0)
+            ys.append(y)
+        wire_f = tuple(ys[(d - 1) % D] for d in range(D))
+        return (wire_f, tuple(fstash), out), None
+
+    (_, _, out), _ = lax.scan(tick_body, (wires0, fstash0, out0), jnp.arange(T))
+    return out[:C]
 
 
 # --------------------------------------------------- homogeneous helpers --

@@ -7,10 +7,12 @@ Two modes:
     (paper-faithful ``sequential`` or beyond-paper ``halo``) on either
     engine — ``--engine host`` (torchgpipe-style queue loop) or ``--engine
     compiled`` (one jitted SPMD program). Both engines take any
-    ``--schedule`` (fill_drain / 1f1b / interleaved); the compiled engine
-    lowers 1F1B/interleaved timelines into the jitted program
-    (``spmd_pipeline_scheduled``), so the memory/bubble wins run on the
-    fast path too:
+    ``--schedule`` (fill_drain / 1f1b / interleaved / zb-h1); the compiled
+    engine lowers 1F1B/interleaved/zero-bubble timelines into the jitted
+    program (``spmd_pipeline_scheduled``), so the memory/bubble wins run on
+    the fast path too, and ``--engine compiled`` validation runs through
+    the engine's forward-only jitted eval pipeline instead of a host
+    full-batch fallback:
 
         PYTHONPATH=src python -m repro.launch.train --mode gnn \
             --dataset pubmed --epochs 300 --stages 4 --chunks 4 \
@@ -18,6 +20,9 @@ Two modes:
         PYTHONPATH=src python -m repro.launch.train --mode gnn \
             --dataset cora --stages 4 --chunks 4 --engine compiled \
             --schedule 1f1b
+        PYTHONPATH=src python -m repro.launch.train --mode gnn \
+            --dataset cora --stages 4 --chunks 4 --engine compiled \
+            --schedule zb-h1
         PYTHONPATH=src python -m repro.launch.train --mode gnn \
             --dataset cora --stages 4 --chunks 4 --engine compiled \
             --schedule interleaved --pipe-devices 2
@@ -96,7 +101,13 @@ def run_gnn(args) -> dict:
     params = pipe.init_params(init_key)
     optimizer = opt_lib.adam(5e-3, weight_decay=5e-4)
     opt_state = optimizer.init(params)
-    evaluate = make_eval(model)
+    if engine == "compiled":
+        # validation runs through the engine's forward-only jitted pipeline
+        # (no host full-batch fallback): same metric dict, computed over the
+        # plan's core nodes by the scheduled executor's eval twin
+        evaluate = lambda p, _g: pipe.evaluate(p, plan)  # noqa: E731
+    else:
+        evaluate = make_eval(model)
 
     times = []
     loss = jnp.zeros(())
@@ -148,7 +159,7 @@ def run_lm(args) -> dict:
     if schedule not in ("fill_drain", "interleaved"):
         raise ValueError(
             f"--mode lm supports fill_drain|interleaved schedules, got {schedule!r} "
-            "(1f1b is a host-GNN-engine schedule)"
+            "(1f1b/zb-h1 are GNN-engine schedules)"
         )
     if schedule == "interleaved" and stages > 1:
         # physical stage devices: --pipe-devices, else the largest divisor of
@@ -233,7 +244,7 @@ def main():
                          "one compiled SPMD program (shard_map/ppermute); both "
                          "accept any --schedule")
     ap.add_argument("--schedule", default="fill_drain",
-                    choices=["fill_drain", "gpipe", "1f1b", "interleaved"])
+                    choices=["fill_drain", "gpipe", "1f1b", "interleaved", "zb-h1"])
     ap.add_argument("--pipe-devices", type=int, default=None,
                     help="interleaved: physical devices (virtual stages = stages/devices)")
     ap.add_argument("--stages", type=int, default=1)

@@ -265,6 +265,75 @@ def make_gnn_stage_slices(
     return [make(s) for s in range(len(bounds))]
 
 
+def make_gnn_stage_slices_bw(
+    model: GNNModel,
+    bounds: list[tuple[int, int]],
+    widths: list[int],
+    graph: GraphBatch,
+    rng: jax.Array,
+    *,
+    train: bool = True,
+    loss_ct=None,
+):
+    """Split-backward (zero-bubble) halves of ``make_gnn_stage_slices``: the
+    stage backward is cut along the vjp's two cotangent outputs so the
+    scheduled executor can run them in separate ticks.
+
+    Returns ``(b_fns, w_fns)``:
+
+      * ``b_fns[s](params, chunk, h_in, ct) -> (d_h, residual, loss_sum,
+        count)`` — the **B** (input-grad) half: differentiate the stage wrt
+        its *input only* (``jax.vjp`` of ``h -> slice(params, chunk, h)``,
+        so XLA dead-code-eliminates the weight-grad work) and return the
+        upstream cotangent immediately — the only product on the pipeline's
+        critical path — plus the residual the deferred W half needs: the
+        ``(h_in, ct_applied)`` pair, two uniform wire-shaped buffers (kept
+        as a tuple, not stacked — the executor stashes the halves
+        separately so no concat/slice materializes per tick).
+        At the LAST stage ``loss_ct(y, chunk) -> (ct, loss_sum, count)``
+        derives the applied cotangent from the stage's own output (the
+        pipeline's loss head); other stages consume the wire ``ct`` and
+        report zeros.
+      * ``w_fns[s](params, chunk, residual) -> d_params`` — the **W**
+        (weight-grad) half: re-materialize the stage forward from the
+        residual's banked input (GPipe's recompute discipline) and
+        differentiate wrt the FULL params list, yielding the same
+        zero-outside-the-stage gradient pytree the fused backward produces
+        — float-identical, since both halves replay the identical primal
+        and cotangent chains.
+
+    Stage 0 ignores ``h_in`` (features are read by chunk id), so its B half
+    is almost entirely dead code — mirroring zb-h1's accounting, where the
+    first stage's critical-path backward is free.
+    """
+    slices = make_gnn_stage_slices(model, bounds, widths, graph, rng, train=train)
+    zero = jnp.zeros((), jnp.float32)
+
+    def make(s: int):
+        fwd = slices[s]
+        last = s == len(bounds) - 1 and loss_ct is not None
+
+        def b_fn(params, chunk, h_in, ct):
+            y, vjp = jax.vjp(lambda h: fwd(params, chunk, h), h_in)
+            if last:
+                ct, loss_sum, count = loss_ct(y, chunk)
+            else:
+                loss_sum = count = zero
+            (d_h,) = vjp(ct)
+            return d_h, (h_in, ct), loss_sum, count
+
+        def w_fn(params, chunk, residual):
+            h_in, ct = residual
+            _, vjp = jax.vjp(lambda p: fwd(p, chunk, h_in), params)
+            (d_params,) = vjp(ct)
+            return d_params
+
+        return b_fn, w_fn
+
+    pairs = [make(s) for s in range(len(bounds))]
+    return [b for b, _ in pairs], [w for _, w in pairs]
+
+
 def build_paper_gat(
     num_features: int,
     num_classes: int,

@@ -139,6 +139,7 @@ SCHEDULE_MATRIX = [  # (schedule, num_devices kwarg)
     ("fill_drain", None),
     ("1f1b", None),
     ("interleaved", 2),
+    ("zb-h1", None),
 ]
 
 
@@ -193,6 +194,32 @@ def test_scheduled_engine_peak_live_below_fill_drain(setup):
     assert pipe.schedule.peak_live_activations(S, C) < S * C
 
 
+def test_zb_h1_engine_peak_live_not_above_1f1b(setup):
+    """The zero-bubble invariant in the engine: zb-h1's B half keeps 1F1B's
+    activation window, so its peak banked stage inputs never exceed 1F1B's
+    (the residual stash is accounted separately as ``w_slots_per_device``)."""
+    g, m, params = setup
+    opt = opt_lib.adam(1e-2)
+    C = 4
+    plan = make_plan(g, C, strategy="halo", halo_hops=2)
+    peaks = {}
+    for schedule in ("1f1b", "zb-h1"):
+        pipe = make_engine("compiled", m, GPipeConfig(
+            balance=(2, 1, 1, 2), chunks=C, schedule=schedule,
+        ))
+        stats = {}
+        pipe.train_step(
+            params, opt.init(params), plan, jax.random.PRNGKey(0), opt, stats=stats
+        )
+        peaks[schedule] = stats
+    zb, ob = peaks["zb-h1"], peaks["1f1b"]
+    assert zb["measured_peak_live_activations"] <= ob["measured_peak_live_activations"]
+    assert zb["stash_slots_per_device"] == ob["stash_slots_per_device"]
+    assert 0 < zb["w_slots_per_device"] <= C
+    assert ob["w_slots_per_device"] == 0  # fused backward banks no residuals
+    assert zb["bubble_fraction"] < ob["bubble_fraction"]
+
+
 def test_scheduled_engine_rejects_illegal_combo(setup):
     """Interleaved needs chunks divisible by devices: the lowering-time
     ValueError surfaces at train_step, not as silent mis-routing."""
@@ -204,6 +231,54 @@ def test_scheduled_engine_rejects_illegal_combo(setup):
     ))
     with pytest.raises(ValueError):
         pipe.train_step(params, opt.init(params), plan, jax.random.PRNGKey(0), opt)
+
+
+# ------------------------------------------------- compiled eval path --
+
+
+def test_compiled_evaluate_matches_host_eval(setup):
+    """The forward-only jitted eval program: on a lossless halo plan (hops
+    >= model depth) the chunked core-node metrics equal the host full-batch
+    ``make_eval`` numbers — so --engine compiled validation can run through
+    the compiled path without changing any reported accuracy."""
+    from repro.train.loop import make_eval
+
+    g, m, params = setup
+    plan = make_plan(g, 3, strategy="halo", halo_hops=2)
+    pipe = make_engine("compiled", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=3))
+    got = pipe.evaluate(params, plan)
+    want = make_eval(m)(params, g)
+    assert set(got) == {"train_loss", "train_acc", "val_acc", "test_acc"}
+    for k in got:
+        assert abs(float(got[k]) - float(want[k])) < 1e-5, (k, got[k], want[k])
+
+
+def test_compiled_evaluate_after_training(setup):
+    """Eval and train steps share the engine: training through the
+    scheduled executor then evaluating through the forward-only program
+    works on the same instance (separate program caches), and the eval
+    program is cached per plan shape."""
+    g, m, _ = setup
+    opt = opt_lib.adam(1e-2)
+    pipe = make_engine("compiled", m, GPipeConfig(
+        balance=(2, 1, 1, 2), chunks=2, schedule="zb-h1",
+    ))
+    plan = make_plan(g, 2, strategy="halo", halo_hops=2)
+    key = jax.random.PRNGKey(42)
+    params = pipe.init_params(key)
+    state = opt.init(params)
+    accs = []
+    for _ in range(15):
+        key, rng = jax.random.split(key)
+        params, state, loss = pipe.train_step(params, state, plan, rng, opt)
+        accs.append(float(pipe.evaluate(params, plan)["train_acc"]))
+    assert len(pipe._evals) == 1  # one program per stacked-plan shape
+    assert accs[-1] >= 0.8, accs[-1]
+    # and the metrics agree with a host full-batch apply of the same params
+    logp = m.apply(params, g)
+    want = float(((jnp.argmax(logp, -1) == g.labels) * g.train_mask).sum()
+                 / g.train_mask.sum())
+    assert abs(accs[-1] - want) < 1e-5
 
 
 # ------------------------------------------------ ragged / empty chunks --
@@ -246,16 +321,19 @@ def test_stacked_plan_keeps_empty_chunk_mask_correct(setup):
     assert int(stacked.core_mask.sum()) == g.num_nodes
 
 
-def test_empty_chunk_trains_identically_on_both_engines(setup):
+@pytest.mark.parametrize("schedule", ["1f1b", "zb-h1"])
+def test_empty_chunk_trains_identically_on_both_engines(setup, schedule):
     """A count=0 chunk must ride the scheduled executor as an inert
     microbatch: same loss and params as the host engine running the same
-    ragged plan, and everything stays finite."""
+    ragged plan, and everything stays finite — including through zb-h1's
+    split B/W ticks, whose deferred weight grads for the empty chunk are
+    all zeros."""
     g, m, params = setup
     opt = opt_lib.adam(1e-2)
     plan = _plan_with_empty_chunk(g, chunks=3)  # C = 4 incl. empty
     host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=4))
     comp = make_engine("compiled", m, GPipeConfig(
-        balance=(2, 1, 1, 2), chunks=4, schedule="1f1b",
+        balance=(2, 1, 1, 2), chunks=4, schedule=schedule,
     ))
     ph = pc = params
     oh = oc = opt.init(params)
@@ -339,10 +417,12 @@ def _run(src: str, devices: int = 4, timeout: int = 1200):
 @pytest.mark.slow
 def test_compiled_engine_matches_host_multidevice():
     """The full schedule×engine matrix on 4 simulated devices: the
-    fill-drain shard_map/ppermute ring AND the scheduled executor (1F1B on
-    the 4-device ring, interleaved on a 2-device ring with 2 virtual stages
-    each) all produce the same per-epoch losses and post-step params as the
-    host GPipe fill-drain baseline."""
+    fill-drain shard_map/ppermute ring AND the scheduled executor (1F1B and
+    zb-h1 split backward on the 4-device ring, interleaved on a 2-device
+    ring with 2 virtual stages each) all produce the same per-epoch losses
+    and post-step params as the host GPipe fill-drain baseline — and the
+    forward-only compiled eval program agrees with the host full-batch
+    eval on the ring substrate too."""
     out = _run("""
     import jax, jax.numpy as jnp
     from repro.core.microbatch import make_plan
@@ -350,6 +430,7 @@ def test_compiled_engine_matches_host_multidevice():
     from repro.graphs import load_dataset
     from repro.models.gnn.net import build_paper_gat
     from repro.train import optimizer as opt_lib
+    from repro.train.loop import make_eval
 
     assert jax.device_count() == 4, jax.device_count()
     g = load_dataset("karate")
@@ -359,7 +440,8 @@ def test_compiled_engine_matches_host_multidevice():
     C = 4
     plan = make_plan(g, C, strategy="halo", halo_hops=2)
     host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
-    for schedule, nd in (("fill_drain", None), ("1f1b", None), ("interleaved", 2)):
+    for schedule, nd in (("fill_drain", None), ("1f1b", None),
+                         ("interleaved", 2), ("zb-h1", None)):
         comp = make_engine("compiled", m, GPipeConfig(
             balance=(2, 1, 1, 2), chunks=C, schedule=schedule, num_devices=nd))
         ph = pc = params
@@ -373,6 +455,12 @@ def test_compiled_engine_matches_host_multidevice():
         for a, b in zip(jax.tree_util.tree_leaves(ph), jax.tree_util.tree_leaves(pc)):
             assert jnp.allclose(a, b, atol=5e-4), (schedule, float(jnp.max(jnp.abs(a - b))))
         print('MD_ENGINE_OK', schedule)
+    ev = comp.evaluate(pc, plan)
+    want = make_eval(m)(pc, g)
+    for k in ev:
+        assert abs(float(ev[k]) - float(want[k])) < 1e-5, (k, ev[k], want[k])
+    print('MD_EVAL_OK')
     """)
-    for schedule in ("fill_drain", "1f1b", "interleaved"):
+    for schedule in ("fill_drain", "1f1b", "interleaved", "zb-h1"):
         assert f"MD_ENGINE_OK {schedule}" in out
+    assert "MD_EVAL_OK" in out

@@ -101,11 +101,17 @@ def test_pipeline_records_schedule(setup):
     assert all(r[4] >= 0 for r in rec)
 
 
-@pytest.mark.parametrize("schedule,num_devices", [("1f1b", None), ("interleaved", 2)])
+@pytest.mark.parametrize(
+    "schedule,num_devices",
+    [("1f1b", None), ("interleaved", 2), ("zb-h1", None)],
+)
 def test_schedule_gradients_match_fill_drain(setup, schedule, num_devices):
     """Any schedule's train_step yields the same update as the fill-drain
     baseline (per-chunk gradients reduce in a canonical order, so the floats
-    are identical bit for bit — allclose with atol 0)."""
+    are identical bit for bit — allclose with atol 0). zb-h1's split
+    backward rides the same invariant: its W half differentiates the same
+    re-materialized stage wrt params with the same cotangent, so the
+    deferred weight grads are the very floats the fused vjp produces."""
     g, m, params = setup
     opt = opt_lib.adam(1e-2)
     C = 4
@@ -165,6 +171,35 @@ def test_interleaved_engine_stats(setup):
     assert len([r for r in rec if r[0] == "bwd"]) == 4 * C
     assert stats["bubble_fraction"] < bubble_fraction(2, C)  # fill-drain, 2 devices
     assert stats["num_devices"] == 2
+
+
+def test_zb_h1_host_engine_stats_and_record(setup):
+    """The host engine executes the three-phase zb-h1 timeline: S*C items
+    per phase (fwd / bwd_b / bwd_w), a bubble strictly below 1F1B's, peak
+    live stage-inputs no higher than 1F1B's, and the deferred-W residual
+    count surfaced in stats."""
+    g, m, params = setup
+    opt = opt_lib.adam(1e-2)
+    C = 4
+    plan = make_plan(g, C, strategy="sequential")
+    peaks = {}
+    recs = {}
+    for schedule in ("1f1b", "zb-h1"):
+        pipe = GPipe(m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C, schedule=schedule))
+        rec, stats = [], {}
+        pipe.train_step(
+            params, opt.init(params), plan, jax.random.PRNGKey(0), opt,
+            record=rec, stats=stats,
+        )
+        peaks[schedule] = stats
+        recs[schedule] = rec
+    zb, ob = peaks["zb-h1"], peaks["1f1b"]
+    for phase in ("fwd", "bwd_b", "bwd_w"):
+        assert len([r for r in recs["zb-h1"] if r[0] == phase]) == 4 * C
+    assert zb["bubble_fraction"] < ob["bubble_fraction"]
+    assert zb["measured_peak_live_activations"] <= ob["measured_peak_live_activations"]
+    assert 0 < zb["measured_peak_w_residuals"] <= 4 * C
+    assert ob["measured_peak_w_residuals"] == 0
 
 
 def test_bad_schedule_config_raises(setup):

@@ -5,13 +5,17 @@ import pytest
 
 from repro.core.schedule import (
     PHASE_BWD,
+    PHASE_BWD_B,
+    PHASE_BWD_W,
     PHASE_FWD,
     PHASE_IDLE,
     FillDrainSchedule,
     InterleavedSchedule,
     OneFOneBSchedule,
     WorkItem,
+    ZeroBubbleH1Schedule,
     bubble_fraction,
+    forward_timeline,
     get_schedule,
     lower_timeline,
     peak_live_activations,
@@ -25,7 +29,7 @@ INTERLEAVED_GRID = [  # (num_devices, num_stages, num_chunks); V = S / D
 
 
 def _schedules_for(S, C):
-    scheds = [get_schedule("fill_drain"), get_schedule("1f1b")]
+    scheds = [get_schedule("fill_drain"), get_schedule("1f1b"), get_schedule("zb-h1")]
     for D in range(1, S + 1):
         if S % D == 0 and C % D == 0 and C >= D:
             scheds.append(get_schedule("interleaved", num_devices=D))
@@ -197,15 +201,16 @@ def test_validate_timeline_rejects_bwd_before_next_stage_fwd():
 def _replay(low):
     """Interpret the lowered index arrays against an abstract machine and
     assert the dataflow is exact: every fwd reads the value its upstream
-    stage produced, every bwd reads the stage input it stashed and the
-    cotangent its downstream stage sent back, slots never clobber live
-    values."""
+    stage produced, every bwd/bwd_b reads the stage input it stashed and the
+    cotangent its downstream stage sent back, every bwd_w reads the residual
+    its matching bwd_b banked, slots never clobber live values."""
     S, C, D, T = low.num_stages, low.num_chunks, low.num_devices, low.num_ticks
     wire_f = [None] * D  # value arriving at device d this tick
     wire_b = [None] * D
     fstash = [[None] * (low.n_fslots + 1) for _ in range(D)]
     bstash = [[None] * (low.n_bslots + 1) for _ in range(D)]
-    done_f, done_b = set(), set()
+    wstash = [[None] * (low.n_wslots + 1) for _ in range(D)]
+    done_f, done_b, done_w, split = set(), set(), set(), set()
     for t in range(T):
         send_f, send_b = [None] * D, [None] * D
         for d in range(D):
@@ -226,7 +231,12 @@ def _replay(low):
                     assert got == ("act", s - 1, c), (t, d, got, ("act", s - 1, c))
                 done_f.add((s, c))
                 send_f[(d + 1) % D] = ("act", s, c)
-            else:
+            elif ph == PHASE_BWD_W:
+                got = wstash[d][low.work_wslot[t, d]]
+                assert got == ("res", s, c), (t, d, got, ("res", s, c))
+                assert (s, c) in done_b, (t, d, "W before its B")
+                done_w.add((s, c))
+            else:  # fused bwd or split bwd_b
                 assert (s, c) in done_f
                 if s > 0:
                     got = fstash[d][low.work_fslot[t, d]]
@@ -236,9 +246,14 @@ def _replay(low):
                     assert got == ("ct", s + 1, c), (t, d, got)
                 done_b.add((s, c))
                 send_b[(d - 1) % D] = ("ct", s, c)
+                if ph == PHASE_BWD_B:
+                    split.add((s, c))
+                    assert low.store_wslot[t, d] < low.n_wslots, (t, d, "B has no W slot")
+                    wstash[d][low.store_wslot[t, d]] = ("res", s, c)
         wire_f, wire_b = send_f, send_b
     assert done_f == {(s, c) for s in range(S) for c in range(C)}
     assert done_b == done_f
+    assert done_w == split  # every banked residual consumed, none invented
 
 
 @pytest.mark.parametrize("S,C", [(2, 2), (4, 4), (4, 8), (3, 6), (6, 8)])
@@ -247,7 +262,14 @@ def test_lowered_timeline_dataflow_exact(S, C):
         low = lower_timeline(sched.timeline(S, C), S, C)
         assert low.phase.shape == (low.num_ticks, low.num_devices)
         assert int((low.phase == PHASE_FWD).sum()) == S * C
-        assert int((low.phase == PHASE_BWD).sum()) == S * C
+        # the input-grad half appears exactly once per (stage, chunk) —
+        # fused for fill-drain/1F1B/interleaved, split for zb-h1 — and W
+        # pairs off with B one to one
+        n_b = int((low.phase == PHASE_BWD).sum() + (low.phase == PHASE_BWD_B).sum())
+        assert n_b == S * C
+        assert int((low.phase == PHASE_BWD_W).sum()) == int(
+            (low.phase == PHASE_BWD_B).sum()
+        )
         _replay(low)
 
 
@@ -301,3 +323,111 @@ def test_describe_keys():
     for key in ("schedule", "ticks", "bubble_fraction", "peak_live_activations"):
         assert key in d
     assert d["schedule"] == "1f1b"
+
+
+# ------------------------------------------------- zero-bubble (zb-h1) --
+
+
+def _zb_timeline_dict(S, C):
+    return {(it.stage, it.chunk, it.phase): (it.tick, it.device)
+            for it in ZeroBubbleH1Schedule().timeline(S, C)}
+
+
+@pytest.mark.parametrize("S,C", [(s, c) for s, c in GRID if s >= 2])
+def test_zb_h1_dominates_1f1b(S, C):
+    """The headline zero-bubble claims: zb-h1's bubble fraction sits
+    strictly below 1F1B's whenever 1F1B has a bubble at all, B keeps 1F1B's
+    activation window so peak live stage-inputs never exceed 1F1B's, and
+    the weighted makespan (B = W = half a backward) undercuts 1F1B's."""
+    zb, ob = ZeroBubbleH1Schedule(), OneFOneBSchedule()
+    if ob.bubble_fraction(S, C) > 0:
+        assert zb.bubble_fraction(S, C) < ob.bubble_fraction(S, C), (S, C)
+    assert zb.peak_live_activations(S, C) <= ob.peak_live_activations(S, C)
+    kw = dict(fwd_cost_per_chunk=1.0, bwd_cost_per_chunk=2.0)
+    assert zb.predicted_step_time(S, C, **kw) <= ob.predicted_step_time(S, C, **kw)
+
+
+def test_zb_h1_unit_cost_makespan():
+    """With unit costs per phase the greedy zb-h1 scheduler achieves the
+    analytic optimum: 3C work ticks per device + S - 1 fill ticks."""
+    zb = ZeroBubbleH1Schedule()
+    for S, C in [(2, 2), (4, 4), (4, 8), (3, 6), (6, 8)]:
+        assert zb.ticks(S, C) == 3 * C + S - 1, (S, C, zb.ticks(S, C))
+
+
+def test_zb_h1_every_w_after_its_b_on_same_device():
+    tl = _zb_timeline_dict(4, 4)
+    for s in range(4):
+        for c in range(4):
+            tb, db = tl[(s, c, "bwd_b")]
+            tw, dw = tl[(s, c, "bwd_w")]
+            assert tw > tb and dw == db == s
+            assert (s, c, "bwd") not in tl
+
+
+def test_zb_h1_lowering_w_slots():
+    """The residual free-list realizes the deferred-W window: slots stay
+    within C per device and the stash replay (in ``_replay``) is exact."""
+    low = lower_timeline(ZeroBubbleH1Schedule().timeline(4, 4), 4, 4)
+    assert low.n_wslots <= 4
+    assert int((low.phase == PHASE_BWD_B).sum()) == 16
+    assert int((low.phase == PHASE_BWD_W).sum()) == 16
+    # fstash window identical to 1F1B's: B frees the stage input
+    ob = lower_timeline(OneFOneBSchedule().timeline(4, 4), 4, 4)
+    assert low.n_fslots == ob.n_fslots
+    assert low.peak_live_stash <= ob.peak_live_stash
+
+
+def test_validate_timeline_rejects_w_before_its_b():
+    """Regression (the satellite bugfix): a W item scheduled before its
+    matching B — or placed on a different device than its B — must be
+    rejected: the residual it consumes either does not exist yet or lives
+    on another device and never travels the wire."""
+    S, C = 3, 2
+    good = _zb_timeline_dict(S, C)
+    T = 1 + max(t for t, _ in good.values())
+    # pull bwd_w(1, 0) to before its bwd_b(1, 0)
+    bad = dict(good)
+    bad[(1, 0, "bwd_w")] = (good[(1, 0, "bwd_b")][0] - 1, 1)
+    items = [WorkItem(t, s, c, ph, d) for (s, c, ph), (t, d) in bad.items()]
+    with pytest.raises(AssertionError):
+        validate_timeline(items, S, C)
+    # same tick is also too early (W consumes the residual B writes)
+    bad = dict(good)
+    bad[(1, 0, "bwd_w")] = (good[(1, 0, "bwd_b")][0], 1)
+    items = [WorkItem(t, s, c, ph, d) for (s, c, ph), (t, d) in bad.items()]
+    with pytest.raises(AssertionError):
+        validate_timeline(items, S, C)
+    # W on a different device than its matching B (free tick, wrong place)
+    bad = dict(good)
+    bad[(1, 0, "bwd_w")] = (T + 1, 2)
+    items = [WorkItem(t, s, c, ph, d) for (s, c, ph), (t, d) in bad.items()]
+    with pytest.raises(AssertionError):
+        validate_timeline(items, S, C)
+    # a W whose B is missing entirely (fused bwd instead) is rejected too
+    bad = dict(good)
+    tb, db = bad.pop((1, 0, "bwd_b"))
+    bad[(1, 0, "bwd")] = (tb, db)
+    items = [WorkItem(t, s, c, ph, d) for (s, c, ph), (t, d) in bad.items()]
+    with pytest.raises(AssertionError):
+        validate_timeline(items, S, C)
+
+
+# ----------------------------------------------- forward-only lowering --
+
+
+def test_forward_timeline_lowering():
+    """The eval path's timeline: fill-drain forwards only, one stash slot
+    per device (wire slack), no cotangent or residual slots."""
+    S, C = 4, 4
+    items = forward_timeline(S, C)
+    assert len(items) == S * C and all(it.phase == "fwd" for it in items)
+    low = lower_timeline(items, S, C, forward_only=True)
+    assert low.num_ticks == C + S - 1
+    assert low.n_fslots == 1 and low.n_bslots == 0 and low.n_wslots == 0
+    assert int((low.phase == PHASE_FWD).sum()) == S * C
+    # a backward-bearing timeline does not pass the forward-only validator
+    with pytest.raises(AssertionError):
+        lower_timeline(
+            FillDrainSchedule().timeline(S, C), S, C, forward_only=True
+        )
