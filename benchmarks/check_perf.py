@@ -10,13 +10,22 @@ regressed:
     gate compares machine-independent ratios: a compiled/host ratio more
     than ``--threshold`` (default 1.20, i.e. >20%) above the baseline's
     ratio fails. ``--absolute`` compares raw seconds instead (only
-    meaningful when baseline and current ran on identical hardware);
+    meaningful when baseline and current ran on identical hardware). Row
+    step times are per-epoch MEDIANS (fig3 writes them that way): on
+    shared CI-class hosts a few scheduler hiccups inflate a mean 2-3x,
+    which is noise, not regression;
   * **coverage** — every compiled row present in the baseline must exist in
     the current table (a silently vanished row is a regression too);
   * **memory** — the scheduled executor's 1F1B peak live activations must
     stay strictly below the fill-drain compiled accounting at every chunk
     count >= 4 (the schedule-aware engine's headline memory invariant; this
     check is deterministic, not timing-based);
+  * **partition** — the profiled (cost-model) partitioner's compiled step
+    time on the deliberately imbalanced GCN stack must beat the
+    layer-count-uniform split's in the same run (``partition/*`` rows; the
+    comparison is run-internal, like the zero-bubble gate, so machine speed
+    cancels). Missing or zero host fill-drain normalizer rows fail with a
+    named-row error instead of silently shrinking the comparison set;
   * **zero-bubble** — at every chunk count >= 4 the compiled zb-h1 row must
     beat or match the same run's compiled 1F1B step time (within the same
     ``--threshold`` slack the speed gate uses), its bubble fraction must sit
@@ -50,16 +59,33 @@ def _chunks_of(key: str) -> int:
     return int(key.rsplit("chunks", 1)[1])
 
 
-def normalized_ratios(rows: dict) -> dict[str, float]:
-    """compiled-row step time / same-run host fill-drain step time."""
-    out = {}
-    for key, row in rows.items():
+def normalized_ratios(rows: dict) -> tuple[dict[str, float], list[str]]:
+    """compiled-row step time / same-run host fill-drain step time.
+
+    Returns (ratios, problems): a compiled row whose host fill-drain
+    normalizer is missing or has a non-positive step time is reported in
+    ``problems`` by NAME — it must become a gate failure, not a silent drop
+    (a table with a broken normalizer used to shrink the comparison set
+    quietly; a key missing from the BASELINE side was never reported at
+    all, and a zero step time would otherwise be a division crash or an
+    infinite ratio depending on which side it landed)."""
+    out: dict[str, float] = {}
+    problems: list[str] = []
+    for key, row in sorted(rows.items()):
         if not key.startswith("compiled/"):
             continue
-        host = rows.get(f"host/fill_drain/chunks{_chunks_of(key)}")
-        if host and host["step_s"] > 0:
+        host_key = f"host/fill_drain/chunks{_chunks_of(key)}"
+        host = rows.get(host_key)
+        if host is None:
+            problems.append(f"{key}: normalizer row {host_key} is missing")
+        elif not host["step_s"] > 0:
+            problems.append(
+                f"{key}: normalizer row {host_key} has non-positive "
+                f"step_s {host['step_s']!r}"
+            )
+        else:
             out[key] = row["step_s"] / host["step_s"]
-    return out
+    return out, problems
 
 
 def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) -> list[str]:
@@ -67,7 +93,7 @@ def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) ->
     b_rows, c_rows = baseline["rows"], current["rows"]
 
     for key in sorted(b_rows):
-        if key.startswith("compiled/") and key not in c_rows:
+        if key.startswith(("compiled/", "partition/")) and key not in c_rows:
             failures.append(f"coverage: baseline row {key} missing from current run")
 
     if absolute:
@@ -77,7 +103,10 @@ def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) ->
             if k.startswith("compiled/") and k in c_rows
         }
     else:
-        nb, nc = normalized_ratios(b_rows), normalized_ratios(c_rows)
+        nb, b_problems = normalized_ratios(b_rows)
+        nc, c_problems = normalized_ratios(c_rows)
+        failures.extend(f"normalizer(baseline): {p}" for p in b_problems)
+        failures.extend(f"normalizer(current): {p}" for p in c_problems)
         pairs = {k: (nb[k], nc[k]) for k in nb if k in nc}
         # every baseline comparison must still be computable: a current run
         # missing the host fill-drain normalizer (or the compiled row) for a
@@ -152,6 +181,24 @@ def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) ->
         elif peak > ob_peak:
             failures.append(
                 f"zero-bubble: {key} peak_live {peak} exceeds 1f1b's {ob_peak}"
+            )
+
+    # partition gate: on the deliberately imbalanced stack the profiled
+    # partitioner's measured compiled step must beat the layer-count-uniform
+    # split (same run, deterministic comparison — the partitioner's whole
+    # claim is that cost-aware boundaries shorten the slowest stage's tick)
+    for key, row in sorted(c_rows.items()):
+        if not key.startswith("partition/profiled/"):
+            continue
+        uni = c_rows.get(f"partition/uniform/chunks{_chunks_of(key)}")
+        if uni is None:
+            failures.append(f"partition: {key} has no uniform row to compare")
+            continue
+        if not row["step_s"] < uni["step_s"]:
+            failures.append(
+                f"partition: {key} step {row['step_s']:.4f}s does not beat "
+                f"the uniform split's {uni['step_s']:.4f}s "
+                f"(balance {row.get('balance')} vs {uni.get('balance')})"
             )
     return failures
 

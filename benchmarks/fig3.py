@@ -18,12 +18,25 @@ speedup against the host fill-drain baseline of the same chunk count.
 ``json_path`` writes the whole table as machine-readable ``BENCH_fig3.json``
 — the artifact the CI perf-regression gate (``benchmarks/check_perf.py``)
 diffs against the committed baseline.
+
+The table also carries the ``partition/*`` rows: the cost-model-driven stage
+partitioner vs the layer-count-uniform split on a deliberately imbalanced
+GCN stack (see ``_partition_bench``), with the measured per-layer cost table
+written alongside the json as ``partition_costs.json``. ``partition=
+"profiled"`` additionally reruns the main engine×schedule matrix with the
+profiler choosing the paper model's balance (exercising the ``--partition``
+CLI path end to end).
 """
 
 from __future__ import annotations
 
 import json
+import os
+import statistics
+import time
 import types
+
+import jax
 
 from benchmarks.common import emit
 from repro.core.microbatch import make_plan
@@ -34,7 +47,8 @@ SCHEDULES = ("fill_drain", "1f1b", "interleaved", "zb-h1")
 ENGINES = ("host", "compiled")
 
 
-def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES, json_path=None):
+def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES,
+        json_path=None, partition="uniform"):
     g = load_dataset(dataset)
     rows = []
     stages, pipe_devices = 4, 2
@@ -47,6 +61,19 @@ def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES, json_pa
     }
     for chunks in range(1, max_chunks + 1):
         plan = make_plan(g, chunks, strategy="sequential")
+        layer_costs = None
+        if partition == "profiled":
+            # profile ONCE per chunk count (costs depend only on the model
+            # and the padded chunk shape) — every matrix cell below reuses
+            # the measurement; only the cheap choose_balance runs per cell
+            from repro.core.costmodel import profile_layer_costs
+            from repro.models.gnn.net import build_paper_gat
+
+            model = build_paper_gat(g.num_features, g.num_classes)
+            chunk0 = jax.tree_util.tree_map(lambda a: a[0], plan.stacked().graph)
+            layer_costs = profile_layer_costs(
+                model, model.init_params(jax.random.PRNGKey(0)), chunk0
+            )
         host_epoch_s = None
         for engine in ENGINES:
             for schedule in schedules:
@@ -54,13 +81,27 @@ def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES, json_pa
                     mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
                     stages=stages, chunks=chunks, epochs=epochs, seed=0, log_every=0,
                     schedule=schedule, pipe_devices=pipe_devices, engine=engine,
+                    partition=partition, layer_costs=layer_costs,
                 )
                 try:
                     r = run_gnn(args)
                 except ValueError:
                     continue  # schedule rejects this (stages, chunks) combo
+                finally:
+                    # each cell leaves its jitted programs in the global
+                    # compilation cache; without clearing, LATE cells measure
+                    # under 30+ resident programs' worth of allocator/cache
+                    # pressure the early cells never saw — a positional bias
+                    # that lands exactly on the zb-h1 rows the perf gate
+                    # compares against 1f1b
+                    jax.clear_caches()
+                # the CSV, the speedup ratio and the gated JSON all use the
+                # same MEDIAN estimator — mixing estimators made the human
+                # artifact disagree with what the gate enforces whenever a
+                # scheduler hiccup inflated one cell's mean
+                step_s = r["median_epoch_s"]
                 if engine == "host" and schedule == "fill_drain":
-                    host_epoch_s = r["avg_epoch_s"]
+                    host_epoch_s = step_s
                 name = (
                     f"{schedule}_chunks{chunks}" if engine == "host"
                     else f"compiled_{schedule}_chunks{chunks}"
@@ -71,18 +112,127 @@ def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES, json_pa
                     f"peak_live={r['peak_live_activations']}"
                 )
                 if engine == "compiled" and host_epoch_s:
-                    derived += f";compiled_vs_host={host_epoch_s / r['avg_epoch_s']:.2f}x"
-                emit(f"fig3/{dataset}/{name}", r["avg_epoch_s"] * 1e6, derived)
+                    derived += f";compiled_vs_host={host_epoch_s / step_s:.2f}x"
+                emit(f"fig3/{dataset}/{name}", step_s * 1e6, derived)
                 bench["rows"][f"{engine}/{schedule}/chunks{chunks}"] = {
-                    "step_s": r["avg_epoch_s"],
+                    # median, not mean: the gate's strict/thresholded row
+                    # comparisons must not hinge on whether a scheduler
+                    # hiccup landed in this cell's epochs (means came out
+                    # 2-3x the median on contended CI-class hosts)
+                    "step_s": r["median_epoch_s"],
                     "bubble": r["bubble_fraction"],
                     "peak_live": r["peak_live_activations"],
                     "peak_live_accounted": r["peak_live_accounted"],
                     "rebuild_s": plan.rebuild_seconds,
                 }
-                rows.append((f"{engine}/{schedule}", chunks, r["avg_epoch_s"], plan.rebuild_seconds))
+                rows.append((f"{engine}/{schedule}", chunks, step_s, plan.rebuild_seconds))
+    rows.extend(
+        _partition_bench(
+            bench,
+            epochs=max(epochs, 12),
+            json_dir=os.path.dirname(json_path) if json_path else None,
+        )
+    )
     if json_path:
         with open(json_path, "w") as f:
             json.dump(bench, f, indent=2, sort_keys=True)
             f.write("\n")
+    return rows
+
+
+def _partition_bench(bench, *, epochs, chunks=4, dataset="cora", json_dir=None):
+    """Cost-model partitioner vs the layer-count-uniform split on the
+    deliberately imbalanced GCN stack (``build_imbalanced_gcn``: the leading
+    convs are ~10x the tail, so the uniform split stacks the two heavy
+    layers into stage 0 and every pipeline tick waits on it). Both configs
+    run the compiled 1F1B executor; rows land in the BENCH json as
+    ``partition/{uniform|profiled}/chunksC`` — the perf gate requires
+    profiled to beat uniform when ticks run concurrently (the CI gate's
+    4 forced host devices). The measured per-layer cost table is written to
+    ``json_dir/partition_costs.json`` (the CI artifact)."""
+    from repro.core.costmodel import (
+        choose_balance,
+        predicted_balance_time,
+        profile_layer_costs,
+        uniform_balance,
+    )
+    from repro.core.pipeline import GPipeConfig, make_engine
+    from repro.core.schedule import get_schedule
+    from repro.models.gnn.net import build_imbalanced_gcn
+    from repro.train import optimizer as opt_lib
+
+    g = load_dataset(dataset)
+    model = build_imbalanced_gcn(g.num_features, g.num_classes)
+    plan = make_plan(g, chunks, strategy="sequential")
+    chunk0 = jax.tree_util.tree_map(lambda a: a[0], plan.stacked().graph)
+    params0 = model.init_params(jax.random.PRNGKey(0))
+    costs = profile_layer_costs(model, params0, chunk0)
+    schedule = get_schedule("1f1b")
+    stages = 4
+    profiled, _ = choose_balance(costs, stages, schedule, chunks)
+    balances = {
+        "uniform": uniform_balance(len(model.layers), stages),
+        "profiled": profiled,
+    }
+    if json_dir:
+        os.makedirs(json_dir, exist_ok=True)
+        with open(os.path.join(json_dir, "partition_costs.json"), "w") as f:
+            json.dump(
+                {
+                    "dataset": dataset,
+                    "model": "imbalanced_gcn",
+                    "layers": costs.table(),
+                    "balances": {
+                        name: {
+                            "balance": list(bal),
+                            "predicted_step_s": predicted_balance_time(
+                                costs, bal, schedule, chunks
+                            ),
+                        }
+                        for name, bal in balances.items()
+                    },
+                },
+                f, indent=2,
+            )
+            f.write("\n")
+
+    # the perf gate compares the two rows STRICTLY, so the measurement must
+    # be drift-proof: the configs' steps run interleaved (machine drift —
+    # thermal, neighbors, allocator state — hits both equally instead of
+    # whichever ran second) and the estimator is the median with the
+    # compile step dropped
+    opt = opt_lib.adam(1e-2)
+    pipes, states, times = {}, {}, {}
+    for name, balance in balances.items():
+        pipes[name] = make_engine("compiled", model, GPipeConfig(
+            balance=balance, chunks=chunks, schedule="1f1b",
+        ))
+        params = pipes[name].init_params(jax.random.PRNGKey(0))
+        states[name] = [params, opt.init(params), jax.random.PRNGKey(0)]
+        times[name] = []
+    for _ in range(epochs):
+        for name, pipe in pipes.items():
+            params, state, key = states[name]
+            key, rng = jax.random.split(key)
+            t0 = time.perf_counter()
+            params, state, loss = pipe.train_step(params, state, plan, rng, opt)
+            jax.block_until_ready(loss)
+            times[name].append(time.perf_counter() - t0)
+            states[name] = [params, state, key]
+
+    rows = []
+    for name, balance in balances.items():
+        step_s = statistics.median(times[name][1:])
+        predicted = predicted_balance_time(costs, balance, schedule, chunks)
+        emit(
+            f"fig3/{dataset}/partition_{name}_chunks{chunks}",
+            step_s * 1e6,
+            f"balance={'-'.join(map(str, balance))};predicted_s={predicted:.4f}",
+        )
+        bench["rows"][f"partition/{name}/chunks{chunks}"] = {
+            "step_s": step_s,
+            "balance": list(balance),
+            "predicted_step_s": predicted,
+        }
+        rows.append((f"partition/{name}", chunks, step_s, plan.rebuild_seconds))
     return rows

@@ -90,4 +90,21 @@ def run(*, dataset="cora", epochs=60, strategies=("sequential", "greedy", "halo"
             f"peak_live={r['peak_live_activations']}",
         )
         rows.append((f"halo/compiled/{schedule}", 4, r["val_acc"]))
+    # partition-invariance column: the SAME halo config under the profiled
+    # (cost-model) balance — moving layer boundaries must not move accuracy,
+    # only the per-stage cost profile (partitioning reorders work, never math)
+    args = types.SimpleNamespace(
+        mode="gnn", dataset=dataset, backend="padded", strategy="halo",
+        stages=4, chunks=4, epochs=epochs, seed=0, log_every=0,
+        schedule="1f1b", pipe_devices=None, engine="compiled",
+        partition="profiled",
+    )
+    r = run_gnn(args)
+    emit(
+        f"fig4/{dataset}/halo_chunks4_compiled_1f1b_profiled",
+        r["avg_epoch_s"] * 1e6,
+        f"val_acc={r['val_acc']:.3f};engine=compiled;"
+        f"balance={'-'.join(map(str, r['balance']))}",
+    )
+    rows.append(("halo/compiled/1f1b/profiled", 4, r["val_acc"]))
     return rows

@@ -21,6 +21,9 @@ def main() -> None:
     ap.add_argument("--json-out", default=None,
                     help="directory for machine-readable outputs (BENCH_fig3.json, "
                          "consumed by benchmarks.check_perf)")
+    ap.add_argument("--partition", default="uniform", choices=["uniform", "profiled"],
+                    help="fig3: stage balance for the engine×schedule matrix "
+                         "(the imbalanced-stack partitioner comparison runs either way)")
     args = ap.parse_args()
 
     epochs = 300 if args.full else (15 if args.fast else 60)
@@ -47,7 +50,8 @@ def main() -> None:
         if args.json_out:
             os.makedirs(args.json_out, exist_ok=True)
             json_path = os.path.join(args.json_out, "BENCH_fig3.json")
-        fig3.run(dataset=dataset, epochs=max(epochs // 2, 10), json_path=json_path)
+        fig3.run(dataset=dataset, epochs=max(epochs // 2, 10), json_path=json_path,
+                 partition=args.partition)
     if want("fig4"):
         from benchmarks import fig4
 

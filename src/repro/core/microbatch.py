@@ -35,7 +35,11 @@ from repro.graphs.data import GraphBatch, pad_graph, subgraph
 STRATEGIES = ("sequential", "random", "greedy", "halo", "sign")
 
 
-@dataclasses.dataclass(frozen=True)
+# eq=False on the array-holding containers: the auto-generated __eq__ would
+# compare jnp.ndarray fields with bool(a == b) — the ambiguous-truth-value
+# error — the first time anything compares two of them (and frozen+eq would
+# try to hash the arrays); identity semantics are the contract.
+@dataclasses.dataclass(frozen=True, eq=False)
 class MicroBatch:
     graph: GraphBatch
     core_mask: jnp.ndarray  # (n_chunk,) — True where loss counts
@@ -45,7 +49,7 @@ class MicroBatch:
         return self.graph.num_nodes
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class StackedPlan:
     """A MicroBatchPlan as ONE uniform-shape pytree: every chunk padded to the
     same node count and neighbor width, then stacked on a leading chunk axis.
@@ -66,7 +70,13 @@ class MicroBatchPlan:
     batches: list[MicroBatch]
     rebuild_seconds: float  # host-side sub-graph construction cost (Fig 3)
     edge_cut: float  # fraction of edges lost (0 for halo/sign)
-    _stacked: StackedPlan | None = dataclasses.field(default=None, repr=False)
+    # init=False keeps the cache out of dataclasses.replace(): a replaced
+    # plan (new batches) starts with a FRESH empty cache instead of silently
+    # carrying a _stacked built from the old batches; compare=False keeps it
+    # out of __eq__ for the same staleness reason.
+    _stacked: StackedPlan | None = dataclasses.field(
+        default=None, repr=False, compare=False, init=False
+    )
 
     def stacked(self) -> StackedPlan:
         """Emit (and cache) the stacked uniform-shape pytree: node counts and

@@ -57,6 +57,7 @@ from repro.core.schedule import (
     PHASE_BWD_B,
     PHASE_BWD_W,
     PHASE_FWD,
+    Placement,
     forward_timeline,
     get_schedule,
     lower_timeline,
@@ -87,6 +88,10 @@ class GPipeConfig:
     schedule: str = "fill_drain"  # "fill_drain"|"gpipe"|"1f1b"|"interleaved"|"zb-h1"
     num_devices: int | None = None  # interleaved: physical devices (V = stages/devices)
     remat: bool = True  # compiled engine: GPipe-style activation re-materialization
+    # stage -> device assignment overriding the schedule's default (ring
+    # rotations + a physical device order); validated against the lowering's
+    # ring check at engine construction
+    placement: Placement | None = None
 
     @property
     def num_stages(self) -> int:
@@ -108,6 +113,16 @@ class PipelineEngine:
         self.model = model
         self.config = config
         self.schedule = get_schedule(config.schedule, num_devices=config.num_devices)
+        self.placement = config.placement
+        if self.placement is not None:
+            self.placement.validate(config.num_stages)
+            want = self.schedule.num_devices(config.num_stages)
+            if self.placement.num_devices != want:
+                raise ValueError(
+                    f"placement spans {self.placement.num_devices} devices "
+                    f"but schedule {config.schedule!r} places "
+                    f"{config.num_stages} stages on {want}"
+                )
         self._bounds: list[tuple[int, int]] = []
         lo = 0
         for b in config.balance:
@@ -154,6 +169,8 @@ class PipelineEngine:
                 "layers": [l.name for l in self.model.layers],
             }
         )
+        if self.placement is not None:
+            d["placement"] = list(self.placement.stage_to_device)
         return d
 
 
@@ -232,7 +249,12 @@ class GPipe(PipelineEngine):
         devs = self.config.devices
         if not devs:
             return tree
-        phys = self.schedule.device_of(s, self.config.num_stages)
+        if self.placement is not None:
+            pos = self.placement.stage_to_device[s]
+            order = self.placement.device_order
+            phys = order[pos] if order is not None else pos
+        else:
+            phys = self.schedule.device_of(s, self.config.num_stages)
         return jax.device_put(tree, devs[phys % len(devs)])
 
     # -------------------------------------------------------------- step --
@@ -295,6 +317,10 @@ class GPipe(PipelineEngine):
         and the schedule's bubble accounting."""
         S, C = self.config.num_stages, plan.chunks
         timeline = self.schedule.timeline(S, C)
+        if self.placement is not None:
+            # re-device the items (ticks/order untouched): recorded items and
+            # _place() then reflect the configured stage->device assignment
+            timeline = self.placement.apply(timeline)
 
         saved: dict[tuple[int, int], Any] = {}
         outs: dict[int, Any] = {}
@@ -322,13 +348,17 @@ class GPipe(PipelineEngine):
             rngs = self._layer_rngs(rng, c)
             lo, hi = self._bounds[s]
             t0 = time.perf_counter()
+            # route the saved stage input and the arriving cotangent onto
+            # this stage's device, exactly like the forward path does for its
+            # input — with per-stage placement they arrive committed to the
+            # NEIGHBOR stage's device and the jitted backward rejects the mix
             if it.phase == "bwd":
                 d_params, d_h = self._bwd_fns[s](
                     self.stage_params(params, s),
                     mb.graph,
-                    saved.pop((s, c)),
+                    self._place(saved.pop((s, c)), s),
                     rngs[lo:hi],
-                    cts[c],
+                    self._place(cts[c], s),
                 )
                 cts[c] = d_h
                 chunk_grads[s][c] = d_params
@@ -336,8 +366,8 @@ class GPipe(PipelineEngine):
             elif it.phase == "bwd_b":
                 # B: emit the upstream cotangent now, defer the weight grad
                 # — the stage input moves from `saved` into the W residual
-                h_in = saved.pop((s, c))
-                ct = cts[c]
+                h_in = self._place(saved.pop((s, c)), s)
+                ct = self._place(cts[c], s)
                 d_h = self._bwd_b_fns[s](
                     self.stage_params(params, s), mb.graph, h_in, rngs[lo:hi], ct
                 )
@@ -377,7 +407,17 @@ class GPipe(PipelineEngine):
             stats["measured_peak_w_residuals"] = peak_residuals
 
         scale = 1.0 / jnp.maximum(total_count, 1.0)
-        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        # scale is committed to the LAST stage's device (it came from the
+        # loss); each layer's gradients live on their own stage's device, so
+        # ship the scalar to each stage before multiplying (no-op placement
+        # when no device list is configured)
+        grads = [
+            jax.tree_util.tree_map(
+                lambda g, sc=self._place(scale, self._stage_of_layer(i)): g * sc,
+                layer_grads,
+            )
+            for i, layer_grads in enumerate(grads)
+        ]
         updates, opt_state = optimizer.update(grads, opt_state, params)
         params = opt_lib.apply_updates(params, updates)
         loss = total_loss / jnp.maximum(total_count, 1.0)
@@ -451,8 +491,34 @@ class CompiledGNNPipeline(PipelineEngine):
         self._lowered: dict = {}  # chunks -> LoweredTimeline (scheduled path)
 
     @property
+    def _identity_ring(self) -> bool:
+        p = self.placement
+        return p is None or p.stage_to_device == tuple(range(self.config.num_stages))
+
+    @property
     def _fill_drain(self) -> bool:
-        return self.config.schedule in ("fill_drain", "gpipe")
+        # a rotated placement re-devices the timeline, which only the
+        # scheduled executor understands — fill-drain under a non-identity
+        # ring routes through it instead of the fused axis_index scan
+        return self.config.schedule in ("fill_drain", "gpipe") and self._identity_ring
+
+    def _mesh_devices(self, num_devices: int):
+        """The mesh's device array: position d of the ring is
+        ``device_order[d]`` of the host's devices when the placement picks an
+        order FOR THIS RING SIZE, devices 0..D-1 otherwise. The size check
+        matters: the eval path rings S devices even when an interleaved
+        placement trains on D < S, and applying the train ring's (shorter)
+        device_order there would hand the S-hop ppermute a D-device mesh."""
+        devs = jax.devices()
+        p = self.placement
+        if p is not None and p.device_order is not None and len(p.device_order) == num_devices:
+            if max(p.device_order) >= len(devs):
+                raise ValueError(
+                    f"placement device_order {p.device_order} references "
+                    f"device indices beyond the host's {len(devs)} devices"
+                )
+            return np.array([devs[i] for i in p.device_order])
+        return np.array(devs[:num_devices])
 
     # ------------------------------------------------------------ program --
 
@@ -512,7 +578,7 @@ class CompiledGNNPipeline(PipelineEngine):
     def _build_step(self, widths: list[int], optimizer: opt_lib.Optimizer):
         S = self.config.num_stages
         if jax.device_count() >= S:
-            mesh = jax.sharding.Mesh(np.array(jax.devices()[:S]), ("stage",))
+            mesh = jax.sharding.Mesh(self._mesh_devices(S), ("stage",))
             loss_fn = compat.shard_map(
                 self._make_local_loss(widths), mesh=mesh,
                 in_specs=(P(),) * 7, out_specs=P(),
@@ -651,6 +717,10 @@ class CompiledGNNPipeline(PipelineEngine):
         dataflow (``spmd_pipeline_scheduled_lanes``)."""
         S = self.config.num_stages
         timeline = self.schedule.timeline(S, chunks)  # raises on bad (S, C)
+        if self.placement is not None:
+            # re-device onto the configured ring rotation; the lowering's
+            # ring check rejects anything the executors could not route
+            timeline = self.placement.apply(timeline)
         lowered = lower_timeline(timeline, S, chunks)
         self._lowered[chunks] = lowered
         D = lowered.num_devices
@@ -676,7 +746,7 @@ class CompiledGNNPipeline(PipelineEngine):
             )
 
         if spmd:
-            mesh = jax.sharding.Mesh(np.array(jax.devices()[:D]), ("stage",))
+            mesh = jax.sharding.Mesh(self._mesh_devices(D), ("stage",))
             mapped = compat.shard_map(
                 local, mesh=mesh, in_specs=(P(),) * 5, out_specs=P()
             )
@@ -704,9 +774,14 @@ class CompiledGNNPipeline(PipelineEngine):
         nodes (padding and halo ghosts masked out), fused into the same
         program."""
         S = self.config.num_stages
-        lowered = lower_timeline(
-            forward_timeline(S, chunks), S, chunks, forward_only=True
-        )
+        items = forward_timeline(S, chunks)
+        if self.placement is not None and self.placement.num_devices == S:
+            # one-stage-per-device rings re-device the eval wave too; an
+            # interleaved round-robin placement (D < S) would double-book
+            # devices on the fill-drain forward wave, so eval keeps its own
+            # S-device identity ring there (as it always has)
+            items = self.placement.apply(items)
+        lowered = lower_timeline(items, S, chunks, forward_only=True)
         D = lowered.num_devices
         d_travel = travel_width(self._bounds, widths)
         model, bounds = self.model, self._bounds
@@ -747,7 +822,8 @@ class CompiledGNNPipeline(PipelineEngine):
 
         mesh = None
         if spmd:
-            mesh = jax.sharding.Mesh(np.array(jax.devices()[:D]), ("stage",))
+            devs = self._mesh_devices(D) if D == S else np.array(jax.devices()[:D])
+            mesh = jax.sharding.Mesh(devs, ("stage",))
             mapped = compat.shard_map(
                 local, mesh=mesh, in_specs=(P(), P()), out_specs=P()
             )

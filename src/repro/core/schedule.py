@@ -75,6 +75,87 @@ def _sort_key(it: WorkItem):
     return (it.tick, 0 if it.phase == "fwd" else 1, it.stage, it.chunk)
 
 
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Stage -> device assignment for a pipeline timeline.
+
+    ``stage_to_device[s]`` is the RING POSITION hosting stage ``s``. The only
+    placements the compiled executors can route are the ring-compatible ones
+    ``lower_timeline`` accepts — stage s+1 one ``ppermute`` hop downstream of
+    stage s (``stage_to_device[s + 1] == (stage_to_device[s] + 1) % D``) — so
+    every valid placement is a rotation of the schedule's default: one stage
+    per device rotated by k, or the interleaved round-robin rotated by k.
+    ``validate`` enforces exactly that rule (the same check the lowering
+    performs) so a bad placement fails loudly at construction instead of
+    surfacing as mis-routed activations.
+
+    ``device_order`` (optional) maps ring position -> PHYSICAL device index
+    (an index into the host's device list): it chooses which real device
+    hosts which ring position without changing the logical dataflow — the
+    knob for heterogeneous hosts where the slowest stage should sit on the
+    fastest device. ``None`` means positions 0..D-1 in enumeration order.
+    """
+
+    stage_to_device: tuple[int, ...]
+    device_order: tuple[int, ...] | None = None
+
+    @property
+    def num_devices(self) -> int:
+        return max(self.stage_to_device) + 1
+
+    @classmethod
+    def ring(
+        cls,
+        num_stages: int,
+        num_devices: int | None = None,
+        *,
+        rotation: int = 0,
+        device_order: tuple[int, ...] | None = None,
+    ) -> "Placement":
+        """The canonical ring placements: stage s on ring position
+        ``(s + rotation) % D`` — one stage per device when ``num_devices`` is
+        omitted, the interleaved round-robin otherwise."""
+        D = num_stages if num_devices is None else num_devices
+        return cls(
+            tuple((s + rotation) % D for s in range(num_stages)),
+            device_order=device_order,
+        ).validate(num_stages)
+
+    def validate(self, num_stages: int) -> "Placement":
+        std = self.stage_to_device
+        if len(std) != num_stages:
+            raise ValueError(
+                f"placement maps {len(std)} stages, schedule has {num_stages}"
+            )
+        D = self.num_devices
+        if sorted(set(std)) != list(range(D)):
+            raise ValueError(
+                f"placement must use ring positions 0..{D - 1} contiguously, "
+                f"got {std}"
+            )
+        for s in range(num_stages - 1):
+            if std[s + 1] != (std[s] + 1) % D:
+                raise ValueError(
+                    f"placement is not ring-compatible: stage {s + 1} on "
+                    f"device {std[s + 1]}, expected {(std[s] + 1) % D} (one "
+                    f"hop after stage {s} on device {std[s]})"
+                )
+        if self.device_order is not None:
+            if len(self.device_order) != D or len(set(self.device_order)) != D:
+                raise ValueError(
+                    f"device_order must list {D} distinct physical device "
+                    f"indices, got {self.device_order}"
+                )
+        return self
+
+    def apply(self, items: list[WorkItem]) -> list[WorkItem]:
+        """Re-device a timeline onto this placement (ticks untouched)."""
+        return [
+            dataclasses.replace(it, device=self.stage_to_device[it.stage])
+            for it in items
+        ]
+
+
 def validate_timeline(
     items: list[WorkItem], num_stages: int, num_chunks: int
 ) -> None:
@@ -208,7 +289,10 @@ _PHASE_CODE = {
 }
 
 
-@dataclasses.dataclass(frozen=True)
+# eq=False: the auto-generated __eq__ would compare ndarray fields with
+# bool(a == b) and raise the ambiguous-truth-value error on first use (and
+# frozen+eq would try to hash arrays); identity semantics are the contract.
+@dataclasses.dataclass(frozen=True, eq=False)
 class LoweredTimeline:
     """A ``WorkItem`` timeline compiled to dense per-tick index arrays — the
     static program the schedule-aware compiled executor
@@ -458,14 +542,30 @@ def lower_timeline(
 # ------------------------------------------------------- list scheduler --
 
 
+def _stage_cost_vector(cost, num_stages: int) -> list[float]:
+    """Normalize a scalar-or-per-stage cost to a length-S list of floats."""
+    if np.ndim(cost) == 0:
+        out = [float(cost)] * num_stages
+    else:
+        out = [float(c) for c in cost]
+        if len(out) != num_stages:
+            raise ValueError(
+                f"per-stage cost vector has {len(out)} entries for "
+                f"{num_stages} stages"
+            )
+    if any(c < 0 for c in out):
+        raise ValueError(f"per-stage costs must be >= 0, got {out}")
+    return out
+
+
 def _greedy_timeline(
     num_stages: int,
     num_chunks: int,
     *,
     device_of,
     fwd_window,
-    fwd_cost: float = 1.0,
-    bwd_cost: float = 1.0,
+    fwd_cost=1.0,
+    bwd_cost=1.0,
 ):
     """Greedy list scheduler over the pipeline DAG.
 
@@ -481,10 +581,13 @@ def _greedy_timeline(
     ``fwd_window(s)``; with window = S - s this greedy ASAP scheduler emits
     exactly the synchronous 1F1B schedule (a window >= C removes the memory
     cap). Backwards win ties so the drain starts as early as possible.
-    Returns (ops, makespan) where ops maps (stage, chunk, phase) ->
-    (start, end) in cost units.
+    ``fwd_cost``/``bwd_cost`` may be scalars (balanced partition) or
+    per-stage vectors (heterogeneous stage costs). Returns (ops, makespan)
+    where ops maps (stage, chunk, phase) -> (start, end) in cost units.
     """
     S, C = num_stages, num_chunks
+    fwd_cost = _stage_cost_vector(fwd_cost, S)
+    bwd_cost = _stage_cost_vector(bwd_cost, S)
     done: dict[tuple[int, int, str], tuple[float, float]] = {}
     fwd_next = [0] * S
     bwd_next = [0] * S
@@ -531,7 +634,7 @@ def _greedy_timeline(
                         best = (cand, s, c, "fwd", dev)
         assert best is not None, "scheduler stalled (dependency cycle?)"
         (start, _, _, _), s, c, phase, dev = best
-        cost = fwd_cost if phase == "fwd" else bwd_cost
+        cost = fwd_cost[s] if phase == "fwd" else bwd_cost[s]
         done[(s, c, phase)] = (start, start + cost)
         free_by_dev[dev] = start + cost
         if phase == "fwd":
@@ -547,16 +650,19 @@ def _ordered_timeline(
     streams: dict[int, list[tuple[str, int, int]]],
     num_stages: int,
     *,
-    fwd_cost: float = 1.0,
-    bwd_cost: float = 1.0,
+    fwd_cost=1.0,
+    bwd_cost=1.0,
 ):
     """ASAP tick assignment for per-device *fixed* op streams.
 
     ``streams[d]`` is device d's op sequence as (phase, stage, chunk); data
     dependencies are the pipeline DAG (fwd chain, bwd chain, loss at the last
-    stage). Each step schedules the earliest-startable stream head. Returns
-    (ops, makespan) like ``_greedy_timeline``."""
+    stage). Each step schedules the earliest-startable stream head. Costs may
+    be scalars or per-stage vectors. Returns (ops, makespan) like
+    ``_greedy_timeline``."""
     S = num_stages
+    fwd_cost = _stage_cost_vector(fwd_cost, S)
+    bwd_cost = _stage_cost_vector(bwd_cost, S)
     done: dict[tuple[int, int, str], tuple[float, float]] = {}
     ptr = {d: 0 for d in streams}
     free = {d: 0.0 for d in streams}
@@ -579,7 +685,7 @@ def _ordered_timeline(
                 best = (cand, d, phase, s, c)
         assert best is not None, "scheduler stalled: stream order deadlocks"
         (start, _), d, phase, s, c = best
-        cost = fwd_cost if phase == "fwd" else bwd_cost
+        cost = fwd_cost[s] if phase == "fwd" else bwd_cost[s]
         done[(s, c, phase)] = (start, start + cost)
         free[d] = start + cost
         ptr[d] += 1
@@ -634,18 +740,41 @@ class Schedule(abc.ABC):
         num_stages: int,
         num_chunks: int,
         *,
-        fwd_cost_per_chunk: float,
-        bwd_cost_per_chunk: float,
+        fwd_cost_per_chunk: float | None = None,
+        bwd_cost_per_chunk: float | None = None,
         transfer_cost: float = 0.0,
         rebuild_cost_per_chunk: float = 0.0,
+        stage_fwd_costs=None,
+        stage_bwd_costs=None,
     ) -> float:
-        """Analytic step time: per-stage per-chunk cost is cost/num_stages
-        (balanced partition) + transfer; the makespan of the schedule's DAG
-        under those costs, plus the paper's host-side rebuild term."""
-        f = fwd_cost_per_chunk / num_stages + transfer_cost
-        b = bwd_cost_per_chunk / num_stages + transfer_cost
+        """Analytic step time: the makespan of the schedule's DAG under
+        per-stage per-chunk costs, plus the paper's host-side rebuild term.
+
+        Costs come either from the balanced-partition model —
+        ``fwd_cost_per_chunk / num_stages`` (+ transfer) per stage, the
+        paper's Fig 3 assumption — or, when ``stage_fwd_costs`` /
+        ``stage_bwd_costs`` are given, from an explicit per-stage cost
+        vector (e.g. the profiler's measured stage sums): real GNN stacks
+        are heterogeneous, the slowest stage sets the tick, and the
+        balanced model silently diverges from measurement there."""
+        f = self._stage_vec(
+            stage_fwd_costs, fwd_cost_per_chunk, num_stages, transfer_cost, "fwd"
+        )
+        b = self._stage_vec(
+            stage_bwd_costs, bwd_cost_per_chunk, num_stages, transfer_cost, "bwd"
+        )
         _, makespan = self._weighted(num_stages, num_chunks, f, b)
         return makespan + num_chunks * rebuild_cost_per_chunk
+
+    @staticmethod
+    def _stage_vec(stage_costs, cost_per_chunk, S, transfer_cost, what):
+        if stage_costs is None:
+            if cost_per_chunk is None:
+                raise ValueError(
+                    f"need {what}_cost_per_chunk or stage_{what}_costs"
+                )
+            stage_costs = cost_per_chunk / S
+        return [c + transfer_cost for c in _stage_cost_vector(stage_costs, S)]
 
     def _weighted(self, S, C, f, b):
         raise NotImplementedError
@@ -701,17 +830,44 @@ class FillDrainSchedule(Schedule):
         num_stages: int,
         num_chunks: int,
         *,
-        fwd_cost_per_chunk: float,
-        bwd_cost_per_chunk: float,
+        fwd_cost_per_chunk: float | None = None,
+        bwd_cost_per_chunk: float | None = None,
         transfer_cost: float = 0.0,
         rebuild_cost_per_chunk: float = 0.0,
+        stage_fwd_costs=None,
+        stage_bwd_costs=None,
     ) -> float:
+        if stage_fwd_costs is not None or stage_bwd_costs is not None:
+            # heterogeneous stages: no closed form — the generic weighted
+            # makespan over fill-drain's fixed per-device op streams
+            return super().predicted_step_time(
+                num_stages,
+                num_chunks,
+                fwd_cost_per_chunk=fwd_cost_per_chunk,
+                bwd_cost_per_chunk=bwd_cost_per_chunk,
+                transfer_cost=transfer_cost,
+                rebuild_cost_per_chunk=rebuild_cost_per_chunk,
+                stage_fwd_costs=stage_fwd_costs,
+                stage_bwd_costs=stage_bwd_costs,
+            )
+        if fwd_cost_per_chunk is None or bwd_cost_per_chunk is None:
+            raise ValueError("need fwd/bwd_cost_per_chunk or stage_fwd/bwd_costs")
         # closed form (the paper's model): critical path is C + S - 1 ticks
         # in each phase
         f = fwd_cost_per_chunk / num_stages + transfer_cost
         b = bwd_cost_per_chunk / num_stages + transfer_cost
         ticks = num_chunks + num_stages - 1
         return ticks * (f + b) + num_chunks * rebuild_cost_per_chunk
+
+    def _weighted(self, S, C, f, b):
+        # fill-drain's per-device streams: all C forwards in chunk order,
+        # then all C backwards in drain (descending-chunk) order
+        streams = {
+            s: [("fwd", s, c) for c in range(C)]
+            + [("bwd", s, c) for c in reversed(range(C))]
+            for s in range(S)
+        }
+        return _ordered_timeline(streams, S, fwd_cost=f, bwd_cost=b)
 
 
 class OneFOneBSchedule(Schedule):
@@ -830,7 +986,11 @@ class ZeroBubbleH1Schedule(Schedule):
         done: dict[tuple[int, int, str], tuple[float, float]] = {}
         nxt = {"fwd": [0] * S, "bwd_b": [0] * S, "bwd_w": [0] * S}
         free = {s: 0.0 for s in range(S)}  # device == stage
-        cost = {"fwd": f, "bwd_b": b, "bwd_w": w}
+        cost = {
+            "fwd": _stage_cost_vector(f, S),
+            "bwd_b": _stage_cost_vector(b, S),
+            "bwd_w": _stage_cost_vector(w, S),
+        }
         n_total = 3 * S * C
         while len(done) < n_total:
             best = None
@@ -868,8 +1028,8 @@ class ZeroBubbleH1Schedule(Schedule):
                         best = cand
             assert best is not None, "zb-h1 scheduler stalled (dependency cycle?)"
             (start, _, _, _), s, c, phase = best
-            done[(s, c, phase)] = (start, start + cost[phase])
-            free[s] = start + cost[phase]
+            done[(s, c, phase)] = (start, start + cost[phase][s])
+            free[s] = start + cost[phase][s]
             nxt[phase][s] += 1
         makespan = max(end for _, end in done.values())
         return done, makespan
@@ -883,18 +1043,35 @@ class ZeroBubbleH1Schedule(Schedule):
         num_stages: int,
         num_chunks: int,
         *,
-        fwd_cost_per_chunk: float,
-        bwd_cost_per_chunk: float,
+        fwd_cost_per_chunk: float | None = None,
+        bwd_cost_per_chunk: float | None = None,
         transfer_cost: float = 0.0,
         rebuild_cost_per_chunk: float = 0.0,
+        stage_fwd_costs=None,
+        stage_bwd_costs=None,
+        stage_bwd_b_costs=None,
+        stage_bwd_w_costs=None,
     ) -> float:
-        # the fused backward's COMPUTE splits evenly across the B and W
-        # halves, but the wire hop belongs to B alone — W consumes a local
-        # residual and sends nothing, so it carries no transfer term
+        # the wire hop belongs to B alone — W consumes a local residual and
+        # sends nothing, so it carries no transfer term. The B/W split is
+        # the MEASURED one when the caller provides both halves (the
+        # profiler does); otherwise the fused backward's compute is assumed
+        # to split evenly
         S, C = num_stages, num_chunks
-        f = fwd_cost_per_chunk / S + transfer_cost
-        b = bwd_cost_per_chunk / S * 0.5 + transfer_cost
-        w = bwd_cost_per_chunk / S * 0.5
+        f = self._stage_vec(
+            stage_fwd_costs, fwd_cost_per_chunk, S, transfer_cost, "fwd"
+        )
+        if stage_bwd_b_costs is not None or stage_bwd_w_costs is not None:
+            if stage_bwd_b_costs is None or stage_bwd_w_costs is None:
+                raise ValueError(
+                    "stage_bwd_b_costs and stage_bwd_w_costs go together"
+                )
+            b = [c + transfer_cost for c in _stage_cost_vector(stage_bwd_b_costs, S)]
+            w = _stage_cost_vector(stage_bwd_w_costs, S)
+        else:
+            bwd = self._stage_vec(stage_bwd_costs, bwd_cost_per_chunk, S, 0.0, "bwd")
+            b = [c * 0.5 + transfer_cost for c in bwd]
+            w = [c * 0.5 for c in bwd]
         _, makespan = self._ops(S, C, f, b, w)
         return makespan + C * rebuild_cost_per_chunk
 

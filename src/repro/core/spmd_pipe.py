@@ -251,7 +251,13 @@ def spmd_pipeline_scheduled(
 
     ``lowered`` is a ``repro.core.schedule.LoweredTimeline``: static per-tick
     ``(phase, stage, chunk, slot)`` index arrays baked into the program as
-    constants; each device reads its column via ``lax.axis_index``.
+    constants; each device reads its column via ``lax.axis_index``. Device
+    columns are RING POSITIONS, not physical device ids: a
+    ``repro.core.schedule.Placement`` rotates stages around the ring by
+    re-devicing the ``WorkItem`` timeline before lowering, and picks which
+    physical device occupies which position through the mesh's device order
+    — both leave this executor's hop pattern (i -> i + 1 and its transpose)
+    untouched, which is exactly why only ring-compatible placements lower.
 
     ``work_fn(phase, stage, chunk, h_in, ct, w_res) -> (y, d_h, w_out,
     grads, loss_sum, count)`` executes one work item (all six args traced

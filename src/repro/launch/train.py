@@ -79,21 +79,61 @@ def run_gnn(args) -> dict:
         print(out)
         return out
 
-    # pipeline path (paper §6): balance the 6-layer sequential model
-    balance = {2: (3, 3), 3: (2, 2, 2), 4: (2, 1, 1, 2), 6: (1, 1, 1, 1, 1, 1)}[args.stages]
+    # pipeline path (paper §6)
     schedule = getattr(args, "schedule", "fill_drain")
     engine = getattr(args, "engine", "host")
     pipe_devices = getattr(args, "pipe_devices", None)
     if schedule == "interleaved" and pipe_devices is None:
         pipe_devices = 2  # stages -> V = stages/2 virtual stages per device
+    plan = make_plan(g, args.chunks, strategy=args.strategy, halo_hops=2, seed=args.seed)
+
+    partition = getattr(args, "partition", "uniform")
+    if partition == "profiled":
+        # cost-model-driven balance: measure per-layer fwd/B/W cost on one
+        # padded chunk of THIS plan (the shape the engines dispatch per
+        # tick), then pick the contiguous grouping minimizing the chosen
+        # schedule's weighted makespan. A caller sweeping many configs over
+        # the same model/plan shape (fig3's matrix) passes the measured
+        # ``layer_costs`` in to skip re-profiling per cell.
+        from repro.core.costmodel import choose_balance, profile_layer_costs
+        from repro.core.schedule import get_schedule
+
+        costs = getattr(args, "layer_costs", None)
+        if costs is None:
+            chunk0 = jax.tree_util.tree_map(lambda a: a[0], plan.stacked().graph)
+            costs = profile_layer_costs(
+                model, model.init_params(jax.random.PRNGKey(args.seed)), chunk0
+            )
+        balance, predicted = choose_balance(
+            costs,
+            args.stages,
+            get_schedule(schedule, num_devices=pipe_devices),
+            args.chunks,
+        )
+        print("[gnn] per-layer profile (ms/chunk):")
+        for row in costs.table():
+            print(f"  {row['layer']:2d} {row['name']:<14s} "
+                  f"fwd {row['fwd_s'] * 1e3:7.3f}  B {row['bwd_b_s'] * 1e3:7.3f}  "
+                  f"W {row['bwd_w_s'] * 1e3:7.3f}")
+        print(f"[gnn] profiled balance={balance} predicted_step={predicted * 1e3:.2f}ms")
+    else:
+        # layer-count split of the 6-layer sequential paper model
+        balance = {2: (3, 3), 3: (2, 2, 2), 4: (2, 1, 1, 2), 6: (1,) * 6}[args.stages]
+
+    placement = None
+    placement_arg = getattr(args, "placement", None)
+    if placement_arg:
+        from repro.core.schedule import Placement
+
+        placement = Placement(tuple(int(x) for x in placement_arg.split(",")))
+
     pipe = make_engine(engine, model, GPipeConfig(
         balance=balance, chunks=args.chunks,
-        schedule=schedule, num_devices=pipe_devices,
+        schedule=schedule, num_devices=pipe_devices, placement=placement,
     ))
-    plan = make_plan(g, args.chunks, strategy=args.strategy, halo_hops=2, seed=args.seed)
     print(f"[gnn] engine={engine} stages={args.stages} chunks={args.chunks} "
-          f"strategy={args.strategy} schedule={schedule} edge_cut={plan.edge_cut:.3f} "
-          f"rebuild_s={plan.rebuild_seconds:.3f} "
+          f"strategy={args.strategy} schedule={schedule} balance={balance} "
+          f"edge_cut={plan.edge_cut:.3f} rebuild_s={plan.rebuild_seconds:.3f} "
           f"bubble={pipe.describe()['bubble_fraction']:.2f}")
 
     key = jax.random.PRNGKey(args.seed)
@@ -129,6 +169,8 @@ def run_gnn(args) -> dict:
         "mode": f"gpipe-{args.strategy}",
         "engine": engine,
         "schedule": schedule,
+        "partition": partition,
+        "balance": list(balance),
         "chunks": args.chunks,
         "edge_cut": plan.edge_cut,
         "bubble_fraction": sched_stats.get("bubble_fraction"),
@@ -140,6 +182,10 @@ def run_gnn(args) -> dict:
         "test_acc": float(m["test_acc"]),
         "first_epoch_s": times[0],
         "avg_epoch_s": float(np.mean(times[1:])) if len(times) > 1 else times[0],
+        # the perf gate's estimator: on shared CPU runners a handful of
+        # scheduler hiccups inflate the mean severalfold; the median is the
+        # honest "typical step" the gate's strict/thresholded comparisons need
+        "median_epoch_s": float(np.median(times[1:])) if len(times) > 1 else times[0],
         "rebuild_s": plan.rebuild_seconds,
     }
     print(out)
@@ -247,6 +293,13 @@ def main():
                     choices=["fill_drain", "gpipe", "1f1b", "interleaved", "zb-h1"])
     ap.add_argument("--pipe-devices", type=int, default=None,
                     help="interleaved: physical devices (virtual stages = stages/devices)")
+    ap.add_argument("--partition", default="uniform", choices=["uniform", "profiled"],
+                    help="gnn stage balance: layer-count split or the cost-model "
+                         "partitioner (profiles per-layer fwd/B/W on a padded chunk, "
+                         "minimizes the schedule's weighted makespan)")
+    ap.add_argument("--placement", default=None,
+                    help="gnn stage->device ring placement as comma ints, e.g. "
+                         "'1,2,3,0' (validated against the lowering's ring check)")
     ap.add_argument("--stages", type=int, default=1)
     ap.add_argument("--chunks", type=int, default=1)
     ap.add_argument("--epochs", type=int, default=300)

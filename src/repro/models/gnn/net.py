@@ -372,6 +372,28 @@ def build_paper_gat(
     return GNNModel(layers=layers, in_dim=num_features, out_dim=num_classes)
 
 
+def build_imbalanced_gcn(
+    num_features: int,
+    num_classes: int,
+    *,
+    hidden: tuple[int, ...] = (256, 256, 32, 32, 32, 32),
+    backend: str = "padded",
+) -> GNNModel:
+    """A deliberately cost-IMBALANCED GCN stack — the partitioner's benchmark
+    and test fixture. The leading layers are an order of magnitude wider than
+    the tail, so a layer-count-uniform ``balance`` packs the heavy layers
+    into one stage (which then sets every pipeline tick) while the profiled
+    partitioner isolates them: with the default widths and 4 stages,
+    ``uniform_balance`` groups the two 256-wide convs together and the
+    cost-aware split pulls them apart."""
+    dims = [num_features, *hidden, num_classes]
+    layers = tuple(
+        _gcn_seq_layer(f"gcn_{i}", dims[i], dims[i + 1], backend=backend)
+        for i in range(len(dims) - 1)
+    ) + (_log_softmax_layer(),)
+    return GNNModel(layers=layers, in_dim=num_features, out_dim=num_classes)
+
+
 def build_gnn(
     kind: str,
     num_features: int,

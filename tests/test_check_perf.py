@@ -1,0 +1,184 @@
+"""Unit tests for the CI perf gate's decision logic (benchmarks/check_perf).
+
+The gate ran for several PRs with no tests of its own; the host-normalization
+path in particular could silently shrink the comparison set when a host
+fill-drain normalizer row was missing or zero — in the limit turning the
+speed gate into a no-op pass. These tests drive ``check`` on hand-built
+tables covering the missing-row, zero-time, zero-bubble and partition paths
+directly.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.check_perf import check, normalized_ratios  # noqa: E402
+
+
+def _row(step_s, *, bubble=0.4, peak=8, peak_acc=16):
+    return {
+        "step_s": step_s,
+        "bubble": bubble,
+        "peak_live": peak,
+        "peak_live_accounted": peak_acc,
+    }
+
+
+def _table(**rows):
+    return {"rows": rows}
+
+
+def _base_rows(host=1.0, compiled=0.5):
+    return {
+        "host/fill_drain/chunks2": _row(host),
+        "compiled/fill_drain/chunks2": _row(compiled),
+    }
+
+
+def test_gate_passes_on_identical_tables():
+    t = _table(**_base_rows())
+    assert check(t, t, threshold=1.2, absolute=False) == []
+
+
+def test_speed_regression_fails_and_is_threshold_scaled():
+    base = _table(**_base_rows(host=1.0, compiled=0.5))
+    ok = _table(**_base_rows(host=1.0, compiled=0.55))  # 1.1x, inside 1.2
+    bad = _table(**_base_rows(host=1.0, compiled=0.7))  # 1.4x
+    assert check(base, ok, threshold=1.2, absolute=False) == []
+    failures = check(base, bad, threshold=1.2, absolute=False)
+    assert any(f.startswith("perf:") for f in failures), failures
+
+
+def test_missing_compiled_row_is_coverage_failure():
+    base = _table(**_base_rows())
+    cur = _table(**{"host/fill_drain/chunks2": _row(1.0)})
+    failures = check(base, cur, threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("coverage:") and "compiled/fill_drain/chunks2" in f
+        for f in failures
+    ), failures
+
+
+@pytest.mark.parametrize("side", ["baseline", "current"])
+def test_missing_host_normalizer_fails_by_name(side):
+    """Regression: a table whose host fill-drain normalizer row is MISSING
+    used to drop the pair silently — on the baseline side without any
+    failure at all. Both sides must now fail naming the missing row."""
+    good = _table(**_base_rows())
+    broken = _table(**{"compiled/fill_drain/chunks2": _row(0.5)})
+    baseline, current = (broken, good) if side == "baseline" else (good, broken)
+    failures = check(baseline, current, threshold=1.2, absolute=False)
+    assert any(
+        f.startswith(f"normalizer({side}):")
+        and "host/fill_drain/chunks2 is missing" in f
+        for f in failures
+    ), failures
+
+
+@pytest.mark.parametrize("side", ["baseline", "current"])
+def test_zero_time_host_normalizer_fails_by_name(side):
+    """A zero (or negative) host step time is a broken measurement, not a
+    divisor to crash on or a row to skip: the gate fails naming the row."""
+    good = _table(**_base_rows())
+    broken = _table(**_base_rows(host=0.0))
+    baseline, current = (broken, good) if side == "baseline" else (good, broken)
+    failures = check(baseline, current, threshold=1.2, absolute=False)
+    assert any(
+        f.startswith(f"normalizer({side}):") and "non-positive" in f
+        for f in failures
+    ), failures
+
+
+def test_normalized_ratios_reports_problems_not_exceptions():
+    ratios, problems = normalized_ratios(
+        {
+            "compiled/fill_drain/chunks2": _row(0.5),
+            "compiled/1f1b/chunks4": _row(0.5),
+            "host/fill_drain/chunks4": _row(0.0),
+        }
+    )
+    assert ratios == {}
+    assert len(problems) == 2
+    assert any("is missing" in p for p in problems)
+    assert any("non-positive" in p for p in problems)
+
+
+def test_empty_comparison_set_fails():
+    failures = check(_table(), _table(), threshold=1.2, absolute=False)
+    assert any("no comparable compiled rows" in f for f in failures)
+
+
+# ------------------------------------------------------- zero-bubble path --
+
+
+def _zb_rows(zb_step, ob_step, *, zb_bubble=0.2, ob_bubble=0.43, zb_peak=9, ob_peak=9):
+    return {
+        "host/fill_drain/chunks4": _row(1.0),
+        "compiled/fill_drain/chunks4": _row(0.6, peak=None, peak_acc=16),
+        "compiled/1f1b/chunks4": _row(ob_step, bubble=ob_bubble, peak=ob_peak),
+        "compiled/zb-h1/chunks4": _row(zb_step, bubble=zb_bubble, peak=zb_peak),
+    }
+
+
+def test_zero_bubble_gate_passes_when_zb_dominates():
+    t = _table(**_zb_rows(0.45, 0.5))
+    assert check(t, t, threshold=1.2, absolute=False) == []
+
+
+def test_zero_bubble_gate_fails_on_step_bubble_and_peak():
+    base = _table(**_zb_rows(0.45, 0.5))
+    slow = _table(**_zb_rows(0.7, 0.5))  # zb step > 1f1b * 1.2
+    failures = check(base, slow, threshold=1.2, absolute=False)
+    assert any("zero-bubble" in f and "does not beat" in f for f in failures)
+    bubbly = _table(**_zb_rows(0.45, 0.5, zb_bubble=0.43))
+    failures = check(base, bubbly, threshold=1.2, absolute=False)
+    assert any("zero-bubble" in f and "bubble" in f for f in failures)
+    fat = _table(**_zb_rows(0.45, 0.5, zb_peak=12))
+    failures = check(base, fat, threshold=1.2, absolute=False)
+    assert any("zero-bubble" in f and "peak_live" in f for f in failures)
+
+
+def test_zero_bubble_gate_fails_without_1f1b_row():
+    base = _table(**_zb_rows(0.45, 0.5))
+    cur = dict(_zb_rows(0.45, 0.5))
+    del cur["compiled/1f1b/chunks4"]
+    failures = check(base, _table(**cur), threshold=1.2, absolute=False)
+    assert any("zero-bubble" in f and "no compiled 1f1b row" in f for f in failures)
+
+
+# --------------------------------------------------------- partition path --
+
+
+def _part_rows(uniform, profiled):
+    rows = _base_rows()
+    rows["partition/uniform/chunks4"] = {"step_s": uniform, "balance": [2, 2, 2, 2]}
+    rows["partition/profiled/chunks4"] = {"step_s": profiled, "balance": [1, 1, 1, 5]}
+    return rows
+
+
+def test_partition_gate_requires_profiled_to_beat_uniform():
+    good = _table(**_part_rows(0.40, 0.30))
+    assert check(good, good, threshold=1.2, absolute=False) == []
+    tie = _table(**_part_rows(0.40, 0.40))
+    failures = check(good, tie, threshold=1.2, absolute=False)
+    assert any(f.startswith("partition:") and "does not beat" in f for f in failures)
+    worse = _table(**_part_rows(0.40, 0.50))
+    failures = check(good, worse, threshold=1.2, absolute=False)
+    assert any(f.startswith("partition:") for f in failures)
+
+
+def test_partition_gate_coverage():
+    base = _table(**_part_rows(0.40, 0.30))
+    cur = dict(_part_rows(0.40, 0.30))
+    del cur["partition/uniform/chunks4"]
+    failures = check(base, _table(**cur), threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("coverage:") and "partition/uniform/chunks4" in f
+        for f in failures
+    ), failures
+    assert any(
+        f.startswith("partition:") and "no uniform row" in f for f in failures
+    ), failures

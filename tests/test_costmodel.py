@@ -1,0 +1,190 @@
+"""Cost-model-driven stage partitioning: the profiler over real jitted layer
+slices, the makespan-minimizing partitioner, and the per-stage cost vectors
+it routes through the schedules' ``_weighted`` hooks."""
+
+import jax
+import pytest
+
+from repro.core.costmodel import (
+    LayerCosts,
+    choose_balance,
+    enumerate_balances,
+    predicted_balance_time,
+    profile_layer_costs,
+    uniform_balance,
+)
+from repro.core.microbatch import make_plan
+from repro.core.schedule import get_schedule
+from repro.graphs import load_dataset
+from repro.models.gnn.net import build_imbalanced_gcn, build_paper_gat
+
+
+def _costs(fwd, scale_b=1.0, scale_w=1.0):
+    return LayerCosts(
+        names=tuple(f"l{i}" for i in range(len(fwd))),
+        fwd=tuple(fwd),
+        bwd=tuple(f * (scale_b + scale_w) for f in fwd),
+        bwd_b=tuple(f * scale_b for f in fwd),
+        bwd_w=tuple(f * scale_w for f in fwd),
+    )
+
+
+# ------------------------------------------------------------ partitioner --
+
+
+def test_uniform_balance_contiguous_split():
+    assert uniform_balance(8, 4) == (2, 2, 2, 2)
+    assert uniform_balance(6, 4) == (2, 2, 1, 1)
+    assert uniform_balance(4, 4) == (1, 1, 1, 1)
+    with pytest.raises(ValueError):
+        uniform_balance(3, 4)
+
+
+def test_enumerate_balances_counts_and_sums():
+    bals = list(enumerate_balances(6, 3))
+    assert len(bals) == 10  # C(5, 2)
+    assert all(sum(b) == 6 and all(x >= 1 for x in b) for b in bals)
+    assert len(set(bals)) == len(bals)
+
+
+def test_partitioner_prefers_uniform_on_uniform_costs():
+    """Flat per-layer costs: the layer-count split already minimizes the
+    makespan; the tie-break must return it (not an arbitrary winner)."""
+    costs = _costs([1.0] * 8)
+    for name in ("fill_drain", "1f1b", "zb-h1"):
+        bal, _ = choose_balance(costs, 4, get_schedule(name), 4)
+        assert bal == (2, 2, 2, 2), (name, bal)
+
+
+def test_partitioner_isolates_heavy_layer():
+    """One dominant layer: every schedule's best partition gives it its own
+    stage — the bottleneck sets the tick, so co-locating anything with it
+    only stretches the makespan."""
+    costs = _costs([10.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+    for name in ("fill_drain", "1f1b", "zb-h1"):
+        bal, t = choose_balance(costs, 4, get_schedule(name), 4)
+        assert bal[0] == 1, (name, bal)
+        uni_t = predicted_balance_time(costs, (2, 2, 2, 2), get_schedule(name), 4)
+        assert t < uni_t, (name, t, uni_t)
+
+
+def test_partitioner_never_worse_than_uniform():
+    """The chosen balance's predicted makespan is <= the uniform split's for
+    every schedule (uniform is in the candidate set)."""
+    costs = _costs([3.0, 0.5, 2.0, 0.1, 0.1, 4.0, 0.2, 0.3], scale_b=0.8, scale_w=1.3)
+    for name, nd in (("fill_drain", None), ("1f1b", None), ("zb-h1", None),
+                     ("interleaved", 2)):
+        sched = get_schedule(name, num_devices=nd)
+        bal, t = choose_balance(costs, 4, sched, 4)
+        assert t <= predicted_balance_time(costs, uniform_balance(8, 4), sched, 4)
+
+
+def test_stage_costs_and_validation():
+    costs = _costs([1.0, 2.0, 3.0, 4.0])
+    f, b = costs.stage_costs((1, 3))
+    assert f == [1.0, 9.0]
+    assert b == [2.0, 18.0]  # bwd = b + w = 2x fwd here
+    f, bb, bw = costs.stage_costs_split((1, 3))
+    assert bb == [1.0, 9.0] and bw == [1.0, 9.0]
+    with pytest.raises(ValueError):
+        costs.stage_costs((2, 3))
+    with pytest.raises(ValueError):
+        choose_balance(_costs([1.0] * 40), 20, get_schedule("1f1b"), 4,
+                       max_candidates=10)
+
+
+def test_zb_partitioning_weights_measured_bw_halves():
+    """predicted_balance_time hands zb-h1 the measured B/W halves, not the
+    50/50 fallback: two cost tables with identical fused backwards but
+    opposite B/W skew price differently under zb-h1 (and identically under
+    a fused-backward schedule, which only sees the sum)."""
+    fwd = [1.0, 1.0, 1.0, 1.0]
+    b_heavy = LayerCosts(names=("a", "b", "c", "d"), fwd=tuple(fwd),
+                         bwd=(2.0,) * 4, bwd_b=(1.8,) * 4, bwd_w=(0.2,) * 4)
+    w_heavy = LayerCosts(names=("a", "b", "c", "d"), fwd=tuple(fwd),
+                         bwd=(2.0,) * 4, bwd_b=(0.2,) * 4, bwd_w=(1.8,) * 4)
+    bal = (1, 1, 1, 1)
+    zb = get_schedule("zb-h1")
+    assert b_heavy.bwd == w_heavy.bwd
+    t_b = predicted_balance_time(b_heavy, bal, zb, 4)
+    t_w = predicted_balance_time(w_heavy, bal, zb, 4)
+    assert t_b != t_w
+    ob = get_schedule("1f1b")
+    assert abs(
+        predicted_balance_time(b_heavy, bal, ob, 4)
+        - predicted_balance_time(w_heavy, bal, ob, 4)
+    ) < 1e-12
+
+
+def test_cost_table_shape():
+    table = _costs([1.0, 2.0]).table()
+    assert [r["name"] for r in table] == ["l0", "l1"]
+    assert all({"layer", "name", "fwd_s", "bwd_b_s", "bwd_w_s"} <= set(r) for r in table)
+
+
+# --------------------------------------------------------------- profiler --
+
+
+@pytest.fixture(scope="module")
+def karate_chunk():
+    g = load_dataset("karate")
+    plan = make_plan(g, 2, strategy="sequential")
+    return g, jax.tree_util.tree_map(lambda a: a[0], plan.stacked().graph)
+
+
+def test_profiler_measures_every_layer(karate_chunk):
+    g, chunk0 = karate_chunk
+    model = build_paper_gat(g.num_features, g.num_classes)
+    costs = profile_layer_costs(
+        model, model.init_params(jax.random.PRNGKey(0)), chunk0, repeats=2
+    )
+    assert costs.names == tuple(layer.name for layer in model.layers)
+    assert len(costs.fwd) == len(model.layers)
+    assert all(c > 0 for c in costs.fwd + costs.bwd + costs.bwd_b)
+    assert all(c >= 0 for c in costs.bwd_w)
+    # the fused backward is measured DIRECTLY (one vjp, one primal), not
+    # summed from the halves (two primals) — on tiny layers dispatch noise
+    # swamps the primal, so only the structural bound is asserted
+    assert all(b < 2 * (bb + bw) for b, bb, bw in
+               zip(costs.bwd, costs.bwd_b, costs.bwd_w))
+
+
+def test_profiler_ranks_imbalanced_stack(karate_chunk):
+    """On the deliberately imbalanced fixture the measured cost of the
+    widest conv dominates the tail convs — the ordering the partitioner's
+    win rests on. (karate is tiny, so the tail costs are mostly dispatch
+    noise: the heavy 1024-wide conv must clear their max with margin.)"""
+    g, chunk0 = karate_chunk
+    model = build_imbalanced_gcn(g.num_features, g.num_classes,
+                                 hidden=(1024, 1024, 4, 4, 4, 4))
+    costs = profile_layer_costs(
+        model, model.init_params(jax.random.PRNGKey(0)), chunk0, repeats=3
+    )
+    heavy = costs.fwd[1]  # the 1024 -> 1024 conv
+    tail = max(costs.fwd[2:])
+    assert heavy > 1.5 * tail, (costs.fwd,)
+
+
+def test_profiled_balance_runs_through_engine(karate_chunk):
+    """End-to-end: profile -> choose_balance -> engine accepts the balance
+    and trains (partitioning moves layer boundaries, never the math)."""
+    from repro.core.pipeline import GPipeConfig, make_engine
+    from repro.train import optimizer as opt_lib
+
+    g, chunk0 = karate_chunk
+    model = build_imbalanced_gcn(g.num_features, g.num_classes,
+                                 hidden=(64, 8, 8, 8, 8, 8))
+    params = model.init_params(jax.random.PRNGKey(0))
+    costs = profile_layer_costs(model, params, chunk0, repeats=1)
+    bal, _ = choose_balance(costs, 4, get_schedule("1f1b"), 2)
+    assert sum(bal) == len(model.layers)
+    plan = make_plan(g, 2, strategy="sequential")
+    pipe = make_engine("compiled", model, GPipeConfig(
+        balance=bal, chunks=2, schedule="1f1b",
+    ))
+    opt = opt_lib.adam(1e-2)
+    state = opt.init(params)
+    params, state, loss = pipe.train_step(
+        params, state, plan, jax.random.PRNGKey(1), opt
+    )
+    assert float(loss) == float(loss)  # finite, engine accepted the balance

@@ -220,6 +220,114 @@ def test_zb_h1_engine_peak_live_not_above_1f1b(setup):
     assert zb["bubble_fraction"] < ob["bubble_fraction"]
 
 
+# ------------------------------------------- placement / partition matrix --
+
+
+PLACED_MATRIX = [  # (schedule, num_devices kwarg, ring rotation)
+    ("fill_drain", None, 1),  # non-identity ring: routes through the scheduled executor
+    ("1f1b", None, 2),
+    ("interleaved", 2, 1),
+    ("zb-h1", None, 3),
+]
+
+
+@pytest.mark.parametrize("schedule,pipe_devices,rotation", PLACED_MATRIX)
+def test_placed_schedules_match_host_fill_drain(setup, schedule, pipe_devices, rotation):
+    """The placement axis of the property matrix: ANY valid (= ring) device
+    placement produces updates bit-identical to the host fill-drain baseline
+    on every schedule — placement relabels which device hosts which stage,
+    never what runs. On 1 device this exercises the lane substrate's rotated
+    columns; under CI's 4 forced devices the shard_map ring."""
+    from repro.core.schedule import Placement
+
+    g, m, params = setup
+    opt = opt_lib.adam(1e-2)
+    C = 4
+    plan = make_plan(g, C, strategy="halo", halo_hops=2)
+    placement = Placement.ring(4, pipe_devices, rotation=rotation)
+    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
+    comp = make_engine("compiled", m, GPipeConfig(
+        balance=(2, 1, 1, 2), chunks=C, schedule=schedule,
+        num_devices=pipe_devices, placement=placement,
+    ))
+    ph = pc = params
+    oh = oc = opt.init(params)
+    key = jax.random.PRNGKey(42)
+    for _ in range(2):
+        key, rng = jax.random.split(key)
+        ph, oh, lh = host.train_step(ph, oh, plan, rng, opt)
+        pc, oc, lc = comp.train_step(pc, oc, plan, rng, opt)
+        assert abs(float(lh) - float(lc)) < 1e-4, (schedule, float(lh), float(lc))
+    _params_close(ph, pc, atol=5e-4)
+
+
+@pytest.mark.parametrize("balance", [(1, 2, 2, 1), (1, 1, 1, 3)])
+def test_any_partition_matches_host_fill_drain(setup, balance):
+    """The partition axis: moving stage boundaries (any contiguous balance,
+    e.g. the cost-model partitioner's output) leaves the update bit-identical
+    to the canonical host fill-drain baseline — partitioning redistributes
+    work across devices, never reorders the math."""
+    g, m, params = setup
+    opt = opt_lib.adam(1e-2)
+    C = 4
+    plan = make_plan(g, C, strategy="halo", halo_hops=2)
+    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
+    comp = make_engine("compiled", m, GPipeConfig(
+        balance=balance, chunks=C, schedule="1f1b",
+    ))
+    ph = pc = params
+    oh = oc = opt.init(params)
+    key = jax.random.PRNGKey(42)
+    for _ in range(2):
+        key, rng = jax.random.split(key)
+        ph, oh, lh = host.train_step(ph, oh, plan, rng, opt)
+        pc, oc, lc = comp.train_step(pc, oc, plan, rng, opt)
+        assert abs(float(lh) - float(lc)) < 1e-4, (balance, float(lh), float(lc))
+    _params_close(ph, pc, atol=5e-4)
+
+
+def test_host_engine_with_placement_matches_baseline(setup):
+    """Host-engine leg of the placement matrix: an explicit ring placement
+    (with a device list, so ``_place`` actually routes tensors) leaves the
+    host zb-h1 update identical to the unplaced host fill-drain baseline."""
+    from repro.core.schedule import Placement
+
+    g, m, params = setup
+    opt = opt_lib.adam(1e-2)
+    C = 4
+    plan = make_plan(g, C, strategy="halo", halo_hops=2)
+    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
+    placed = make_engine("host", m, GPipeConfig(
+        balance=(2, 1, 1, 2), chunks=C, schedule="zb-h1",
+        devices=tuple(jax.devices()) * 4,  # cycle the host's devices
+        placement=Placement.ring(4, rotation=2, device_order=(2, 0, 3, 1)),
+    ))
+    ph = pp = params
+    oh = op = opt.init(params)
+    key = jax.random.PRNGKey(42)
+    for _ in range(2):
+        key, rng = jax.random.split(key)
+        ph, oh, lh = host.train_step(ph, oh, plan, rng, opt)
+        pp, op, lp = placed.train_step(pp, op, plan, rng, opt)
+        assert abs(float(lh) - float(lp)) < 1e-6, (float(lh), float(lp))
+    _params_close(ph, pp, atol=1e-6)
+
+
+def test_engine_rejects_incompatible_placement(setup):
+    from repro.core.schedule import Placement
+
+    _, m, _ = setup
+    with pytest.raises(ValueError):  # not ring-compatible
+        make_engine("compiled", m, GPipeConfig(
+            balance=(2, 1, 1, 2), chunks=4, placement=Placement((0, 2, 1, 3)),
+        ))
+    with pytest.raises(ValueError):  # device count != schedule's placement
+        make_engine("host", m, GPipeConfig(
+            balance=(2, 1, 1, 2), chunks=4, schedule="interleaved",
+            num_devices=2, placement=Placement.ring(4),
+        ))
+
+
 def test_scheduled_engine_rejects_illegal_combo(setup):
     """Interleaved needs chunks divisible by devices: the lowering-time
     ValueError surfaces at train_step, not as silent mis-routing."""
@@ -303,9 +411,9 @@ def _plan_with_empty_chunk(g, chunks=3):
     )
     empty = MicroBatch(graph=subgraph(g, nodes), core_mask=jnp.asarray(core))
     assert int(empty.core_mask.sum()) == 0
-    return dc.replace(
-        plan, chunks=chunks + 1, batches=plan.batches + [empty], _stacked=None
-    )
+    # replace() gives the new plan a fresh (empty) _stacked cache — the old
+    # cache never carries over (the microbatch satellite bugfix)
+    return dc.replace(plan, chunks=chunks + 1, batches=plan.batches + [empty])
 
 
 def test_stacked_plan_keeps_empty_chunk_mask_correct(setup):

@@ -1,0 +1,110 @@
+"""Micro-batch container regressions: the ``dataclasses.replace`` stale
+``_stacked`` cache bug and the array-field ``__eq__``/``__hash__`` traps.
+
+Both were latent until something exercised the path: a replaced plan served
+a stacked pytree built from the OLD batches with no error, and comparing any
+two ``MicroBatch``/``StackedPlan``/``LoweredTimeline`` instances raised the
+jnp/np ambiguous-truth-value error the first time a test (or a cache) tried.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.microbatch import MicroBatch, MicroBatchPlan, StackedPlan, make_plan
+from repro.core.schedule import FillDrainSchedule, lower_timeline
+from repro.graphs import load_dataset
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return make_plan(load_dataset("karate"), 3, strategy="halo", halo_hops=2)
+
+
+# ------------------------------------------------- replace() cache regression --
+
+
+def test_replace_does_not_carry_stale_stacked_cache(plan):
+    """Regression: ``dataclasses.replace(plan, batches=...)`` used to copy the
+    ``_stacked`` cache built from the OLD batches — a silently stale pytree.
+    The cache is init=False now, so a replaced plan re-stacks from its own
+    batches."""
+    old_stacked = plan.stacked()
+    assert plan.stacked() is old_stacked  # cached on the original
+
+    reordered = dataclasses.replace(plan, batches=list(reversed(plan.batches)))
+    new_stacked = reordered.stacked()
+    assert new_stacked is not old_stacked
+    # the new stack reflects the NEW batch order, not the cached old one
+    assert jnp.array_equal(
+        new_stacked.graph.features[0], old_stacked.graph.features[-1]
+    )
+    assert jnp.array_equal(
+        new_stacked.core_mask[-1], old_stacked.core_mask[0]
+    )
+    # and the original plan's cache is untouched
+    assert plan.stacked() is old_stacked
+
+
+def test_replace_rejects_explicit_stacked_override(plan):
+    """The cache cannot be smuggled through replace() at all — passing it is
+    an error (init=False), not a silent carry."""
+    plan.stacked()
+    with pytest.raises((ValueError, TypeError)):
+        dataclasses.replace(plan, _stacked=None)
+
+
+def test_plan_equality_ignores_cache(plan):
+    """Two plans that differ only in whether stacked() has been called must
+    compare equal — the cache is compare=False."""
+    bare = MicroBatchPlan(
+        strategy=plan.strategy,
+        chunks=plan.chunks,
+        batches=plan.batches,
+        rebuild_seconds=plan.rebuild_seconds,
+        edge_cut=plan.edge_cut,
+    )
+    plan.stacked()
+    assert plan == bare
+
+
+# ------------------------------------------------ eq/hash on array holders --
+
+
+def test_array_dataclasses_compare_and_hash_without_raising(plan):
+    """Regression: the auto-generated __eq__ on frozen dataclasses holding
+    jnp/np arrays raised the ambiguous-truth-value error on first comparison
+    (and frozen+eq __hash__ tried to hash arrays). eq=False pins identity
+    semantics for MicroBatch, StackedPlan and LoweredTimeline."""
+    mb0, mb1 = plan.batches[0], plan.batches[1]
+    assert isinstance(mb0, MicroBatch)
+    assert mb0 == mb0
+    assert mb0 != mb1  # identity, no ambiguous-truth-value raise
+    assert len({mb0, mb1}) == 2  # hashable (object identity)
+
+    stacked = plan.stacked()
+    assert isinstance(stacked, StackedPlan)
+    other = dataclasses.replace(plan, batches=list(plan.batches)).stacked()
+    assert stacked == stacked
+    assert stacked != other
+    hash(stacked)
+
+    low_a = lower_timeline(FillDrainSchedule().timeline(2, 2), 2, 2)
+    low_b = lower_timeline(FillDrainSchedule().timeline(2, 2), 2, 2)
+    assert low_a == low_a
+    assert low_a != low_b
+    hash(low_a)
+
+
+def test_microbatch_pytree_arrays_usable_after_eq(plan):
+    """The arrays themselves stay first-class after an equality check — the
+    original failure mode was tripping inside ==, poisoning innocuous code
+    like cache lookups that compare keys."""
+    mb = plan.batches[0]
+    assert mb != object()
+    total = jax.tree_util.tree_reduce(
+        lambda acc, a: acc + a.size, mb.graph, 0
+    )
+    assert total > 0

@@ -12,6 +12,7 @@ from repro.core.schedule import (
     FillDrainSchedule,
     InterleavedSchedule,
     OneFOneBSchedule,
+    Placement,
     WorkItem,
     ZeroBubbleH1Schedule,
     bubble_fraction,
@@ -146,6 +147,169 @@ def test_predicted_step_time_ordering():
         2, 4, rebuild_cost_per_chunk=0.5, **kw
     )
     assert abs((fd_r - fd) - 4 * 0.5) < 1e-9
+
+
+def _all_schedules():
+    return [
+        ("fill_drain", get_schedule("fill_drain"), 4),
+        ("1f1b", get_schedule("1f1b"), 4),
+        ("zb-h1", get_schedule("zb-h1"), 4),
+        ("interleaved", get_schedule("interleaved", num_devices=2), 4),
+    ]
+
+
+def test_predicted_step_time_stage_vector_uniform_unchanged():
+    """Regression (the per-stage-cost satellite): the balanced-partition
+    scalar path and an explicitly uniform per-stage vector must agree
+    exactly for EVERY schedule — routing through ``_weighted`` is a
+    refactor of the uniform model, not a change to it."""
+    C = 4
+    kw = dict(fwd_cost_per_chunk=1.0, bwd_cost_per_chunk=2.0, transfer_cost=0.1,
+              rebuild_cost_per_chunk=0.05)
+    for name, sched, S in _all_schedules():
+        scalar = sched.predicted_step_time(S, C, **kw)
+        vector = sched.predicted_step_time(
+            S, C, transfer_cost=0.1, rebuild_cost_per_chunk=0.05,
+            stage_fwd_costs=[1.0 / S] * S, stage_bwd_costs=[2.0 / S] * S,
+        )
+        assert abs(scalar - vector) < 1e-12, (name, scalar, vector)
+
+
+def test_predicted_step_time_imbalanced_vector_changes_makespan():
+    """An imbalanced vector with the SAME total cost lengthens the makespan
+    (the slowest stage sets the tick — the divergence the balanced model
+    hides), for every schedule."""
+    C = 4
+    fwd = [0.7, 0.1, 0.1, 0.1]
+    bwd = [1.4, 0.2, 0.2, 0.2]
+    for name, sched, S in _all_schedules():
+        uniform = sched.predicted_step_time(
+            S, C, stage_fwd_costs=[0.25] * S, stage_bwd_costs=[0.5] * S
+        )
+        skewed = sched.predicted_step_time(
+            S, C, stage_fwd_costs=fwd, stage_bwd_costs=bwd
+        )
+        assert skewed > uniform + 1e-9, (name, skewed, uniform)
+        # and the bottleneck bound holds: at least C ticks of the heaviest
+        # stage's fwd+bwd work must appear in the makespan
+        assert skewed >= C * (fwd[0] + bwd[0]) - 1e-9, (name, skewed)
+
+
+def test_predicted_step_time_vector_validation():
+    sched = get_schedule("1f1b")
+    with pytest.raises(ValueError):
+        sched.predicted_step_time(4, 4, stage_fwd_costs=[1.0] * 3,
+                                  stage_bwd_costs=[1.0] * 4)
+    with pytest.raises(ValueError):
+        sched.predicted_step_time(4, 4, stage_fwd_costs=[1.0, 1.0, -0.5, 1.0],
+                                  stage_bwd_costs=[1.0] * 4)
+    # neither scalar nor vector given: every schedule raises the SAME
+    # descriptive ValueError (zb-h1 used to trip a bare TypeError instead)
+    for name, s, S in _all_schedules():
+        with pytest.raises(ValueError, match="cost_per_chunk or stage_"):
+            s.predicted_step_time(S, 4)
+
+
+def test_zb_h1_uses_measured_bw_split():
+    """zb-h1's weighted makespan can take the MEASURED B/W halves: a skewed
+    split (W-heavy — e.g. a wide input conv's weight grad) prices worse than
+    the 50/50 fallback of the same fused total, because the critical-path B
+    stream no longer hides half the backward in drain ticks symmetrically —
+    and passing halves that sum to the fused cost with an even split matches
+    the fallback exactly."""
+    zb = get_schedule("zb-h1")
+    S = C = 4
+    f = [0.25] * S
+    bwd = [0.5] * S
+    even = zb.predicted_step_time(S, C, stage_fwd_costs=f, stage_bwd_costs=bwd)
+    via_halves = zb.predicted_step_time(
+        S, C, stage_fwd_costs=f,
+        stage_bwd_b_costs=[0.25] * S, stage_bwd_w_costs=[0.25] * S,
+    )
+    assert abs(even - via_halves) < 1e-12
+    skewed = zb.predicted_step_time(
+        S, C, stage_fwd_costs=f,
+        stage_bwd_b_costs=[0.45] * S, stage_bwd_w_costs=[0.05] * S,
+    )
+    assert skewed != even  # the split, not just the total, moves the makespan
+    with pytest.raises(ValueError):  # halves go together
+        zb.predicted_step_time(S, C, stage_fwd_costs=f,
+                               stage_bwd_b_costs=[0.25] * S)
+
+
+def test_fill_drain_weighted_uniform_matches_closed_form():
+    """FillDrain's generic weighted makespan (per-device stream ASAP) agrees
+    with the paper's closed form on uniform costs — the closed form stays
+    the fast path, the stream model extends it."""
+    fd = FillDrainSchedule()
+    for S, C in GRID:
+        closed = fd.predicted_step_time(
+            S, C, fwd_cost_per_chunk=1.0, bwd_cost_per_chunk=2.0
+        )
+        streamed = fd.predicted_step_time(
+            S, C, stage_fwd_costs=[1.0 / S] * S, stage_bwd_costs=[2.0 / S] * S
+        )
+        assert abs(closed - streamed) < 1e-9, (S, C, closed, streamed)
+
+
+# ------------------------------------------------------------- placement --
+
+
+def test_placement_ring_constructor_and_validate():
+    p = Placement.ring(4, rotation=1)
+    assert p.stage_to_device == (1, 2, 3, 0)
+    assert p.num_devices == 4
+    assert Placement.ring(4, 2).stage_to_device == (0, 1, 0, 1)
+    assert Placement.ring(4, 2, rotation=1).stage_to_device == (1, 0, 1, 0)
+    # identity round-trips through validate
+    assert Placement.ring(3).validate(3).stage_to_device == (0, 1, 2)
+
+
+def test_placement_rejects_non_ring():
+    with pytest.raises(ValueError):
+        Placement((0, 2, 1, 3)).validate(4)  # not one hop per stage
+    with pytest.raises(ValueError):
+        Placement((3, 2, 1, 0)).validate(4)  # reversed ring
+    with pytest.raises(ValueError):
+        Placement((0, 1, 2)).validate(4)  # wrong length
+    with pytest.raises(ValueError):
+        Placement((1, 2, 3, 4)).validate(4)  # positions not 0-based/contiguous
+    with pytest.raises(ValueError):
+        Placement((0, 1, 0, 1), device_order=(0, 0)).validate(4)  # dup device
+    with pytest.raises(ValueError):
+        Placement((0, 1, 2, 3), device_order=(0, 1)).validate(4)  # wrong length
+
+
+def test_placement_apply_lowers_for_every_schedule():
+    """Every rotation of every schedule's default placement lowers cleanly
+    (the ring check accepts it) and preserves the tick structure."""
+    C = 4
+    for name, sched, S in _all_schedules():
+        D = sched.num_devices(S)
+        for rot in range(D):
+            p = Placement.ring(S, None if D == S else D, rotation=rot)
+            items = p.apply(sched.timeline(S, C))
+            low = lower_timeline(items, S, C)
+            assert low.num_devices == D, (name, rot)
+            for it in items:
+                assert it.device == (sched.device_of(it.stage, S) + rot) % D
+
+
+def test_placement_rotation_rotates_lowered_columns():
+    """A rotation permutes the lowered per-tick columns, nothing else: the
+    rotated lowering equals the identity lowering with columns rolled."""
+    import numpy as np
+
+    S = C = 4
+    base = lower_timeline(OneFOneBSchedule().timeline(S, C), S, C)
+    rot = lower_timeline(
+        Placement.ring(S, rotation=1).apply(OneFOneBSchedule().timeline(S, C)), S, C
+    )
+    assert np.array_equal(np.roll(base.phase, 1, axis=1), rot.phase)
+    assert np.array_equal(np.roll(base.stage, 1, axis=1), rot.stage)
+    assert np.array_equal(np.roll(base.chunk, 1, axis=1), rot.chunk)
+    assert base.n_fslots == rot.n_fslots
+    assert base.peak_live_stash == rot.peak_live_stash
 
 
 def test_validate_timeline_catches_violations():
