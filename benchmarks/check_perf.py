@@ -36,6 +36,15 @@ regressed:
     forced host devices (the CI gate uses 4; see below), not on the serial
     lane substrate where a drained bubble saves nothing.
 
+The gate also covers the **serving** table (``BENCH_serve.json``, produced
+by ``repro.launch.serve_gnn --json-out``): pass ``--serving-current`` to
+check it against the committed ``benchmarks/BENCH_serve.json``. Every
+baseline serving row must be present (fail-by-name, like the fig3 coverage
+rule), report a positive achieved throughput, and keep its p99 latency —
+normalized by the same run's warm single-batch eval call time, so machine
+speed cancels exactly like the host-normalized fig3 ratios — within
+``--serving-threshold`` of the baseline's normalized p99.
+
 Intentional regressions (e.g. trading speed for a feature) are overridden by
 applying the ``perf-regression-ok`` label to the PR — the CI job skips the
 gate when the label is present — and committing a refreshed baseline.
@@ -43,6 +52,10 @@ gate when the label is present — and committing a refreshed baseline.
     XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
         python -m benchmarks.run --fast --only fig3 --json-out /tmp/bench
     python -m benchmarks.check_perf --current /tmp/bench/BENCH_fig3.json
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+        python -m repro.launch.serve_gnn --qps 50 --duration 5 --json-out /tmp/serve
+    python -m benchmarks.check_perf --serving-current /tmp/serve/BENCH_serve.json
 """
 
 from __future__ import annotations
@@ -53,6 +66,7 @@ import sys
 from pathlib import Path
 
 DEFAULT_BASELINE = Path(__file__).resolve().parent / "BENCH_fig3.json"
+DEFAULT_SERVING_BASELINE = Path(__file__).resolve().parent / "BENCH_serve.json"
 
 
 def _chunks_of(key: str) -> int:
@@ -203,30 +217,115 @@ def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) ->
     return failures
 
 
+def check_serving(baseline: dict, current: dict, *, threshold: float) -> list[str]:
+    """The serving gate over ``BENCH_serve.json`` tables.
+
+    Rules, all fail-by-name like the fig3 gates:
+
+      * every ``serving/`` row in the baseline must exist in the current run
+        (coverage), and the current run must contain at least one;
+      * each current row must report a positive ``achieved_qps`` over a
+        positive query count (a zero-throughput run is a broken server, not
+        a latency data point);
+      * p99 latency is compared as a RATIO over the same run's warm
+        single-batch ``eval_call_s`` — the machine-cancelling normalizer the
+        serving driver measures at warmup — and must stay within
+        ``threshold`` of the baseline's ratio. Queueing makes p99 noisier
+        than a step-time median, hence the separate (looser) serving
+        threshold. A missing or non-positive normalizer on either side is a
+        named failure, never a silent drop."""
+    failures: list[str] = []
+    b_rows = {k: v for k, v in baseline.get("rows", {}).items() if k.startswith("serving/")}
+    c_rows = {k: v for k, v in current.get("rows", {}).items() if k.startswith("serving/")}
+
+    for key in sorted(b_rows):
+        if key not in c_rows:
+            failures.append(f"serving-coverage: baseline row {key} missing from current run")
+    if not c_rows:
+        failures.append("serving-coverage: current run has no serving/ rows")
+
+    def ratio(side, key, row):
+        call = row.get("eval_call_s")
+        if call is None or not call > 0:
+            failures.append(
+                f"serving-normalizer({side}): {key} eval_call_s {call!r} "
+                f"missing or non-positive"
+            )
+            return None
+        p99 = row.get("p99_s")
+        if p99 is None or not p99 > 0:
+            failures.append(f"serving-normalizer({side}): {key} p99_s {p99!r} unusable")
+            return None
+        return p99 / call
+
+    for key in sorted(c_rows):
+        row = c_rows[key]
+        if not row.get("queries", 0) > 0:
+            failures.append(f"serving: {key} served no queries")
+        if not row.get("achieved_qps", 0) > 0:
+            failures.append(f"serving: {key} achieved_qps {row.get('achieved_qps')!r} not positive")
+        cur = ratio("current", key, row)
+        base_row = b_rows.get(key)
+        if base_row is None:
+            continue  # a NEW row has no baseline ratio yet — coverage runs above
+        base = ratio("baseline", key, base_row)
+        if cur is None or base is None:
+            continue
+        status = "ok"
+        if cur > base * threshold:
+            status = f"REGRESSED >{(threshold - 1):.0%}"
+            failures.append(
+                f"serving: {key} p99/eval_call {cur:.2f}x vs baseline "
+                f"{base:.2f}x (allowed {base * threshold:.2f}x)"
+            )
+        print(f"  {key:40s} baseline {base:8.2f}x  current {cur:8.2f}x  {status}")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
-    ap.add_argument("--current", required=True)
+    ap.add_argument("--current", default=None,
+                    help="fresh BENCH_fig3.json (required unless --serving-current is given)")
     ap.add_argument("--threshold", type=float, default=1.20,
                     help="max allowed current/baseline slowdown factor (1.20 = +20%%)")
     ap.add_argument("--absolute", action="store_true",
                     help="compare raw seconds instead of host-normalized ratios")
+    ap.add_argument("--serving-baseline", default=str(DEFAULT_SERVING_BASELINE))
+    ap.add_argument("--serving-current", default=None,
+                    help="fresh BENCH_serve.json from repro.launch.serve_gnn --json-out")
+    ap.add_argument("--serving-threshold", type=float, default=2.0,
+                    help="max allowed normalized-p99 slowdown factor for serving rows "
+                         "(looser than --threshold: open-loop queueing tails are noisy)")
     args = ap.parse_args()
+    if args.current is None and args.serving_current is None:
+        ap.error("provide --current and/or --serving-current")
 
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.current) as f:
-        current = json.load(f)
-
-    print(f"perf gate: baseline={args.baseline} threshold={args.threshold:.2f} "
-          f"mode={'absolute' if args.absolute else 'host-normalized'}")
-    failures = check(baseline, current, threshold=args.threshold, absolute=args.absolute)
+    failures = []
+    if args.current is not None:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        with open(args.current) as f:
+            current = json.load(f)
+        print(f"perf gate: baseline={args.baseline} threshold={args.threshold:.2f} "
+              f"mode={'absolute' if args.absolute else 'host-normalized'}")
+        failures += check(baseline, current, threshold=args.threshold, absolute=args.absolute)
+    if args.serving_current is not None:
+        with open(args.serving_baseline) as f:
+            serving_baseline = json.load(f)
+        with open(args.serving_current) as f:
+            serving_current = json.load(f)
+        print(f"serving gate: baseline={args.serving_baseline} "
+              f"threshold={args.serving_threshold:.2f} (p99 / warm eval call)")
+        failures += check_serving(
+            serving_baseline, serving_current, threshold=args.serving_threshold
+        )
     if failures:
         print("\nPERF GATE FAILED:")
         for msg in failures:
             print(f"  - {msg}")
         print("(intentional? apply the 'perf-regression-ok' PR label and "
-              "commit a refreshed benchmarks/BENCH_fig3.json)")
+              "commit a refreshed benchmarks/BENCH_fig3.json / BENCH_serve.json)")
         return 1
     print("perf gate passed")
     return 0

@@ -1,10 +1,19 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Also the benchmarks' import point for the unified pipeline CLI surface:
+``add_pipeline_args`` / ``PipelineCLIConfig`` live in ``repro.core.cli``
+(importable by launch drivers and examples, which can't see the
+``benchmarks`` package) and are re-exported here so the benchmark scripts
+keep a single local import for their flag handling.
+"""
 
 from __future__ import annotations
 
 import time
 
 import jax
+
+from repro.core.cli import PipelineCLIConfig, add_pipeline_args  # noqa: F401
 
 
 def timed(fn, *args, iters: int = 5, warmup: int = 1):

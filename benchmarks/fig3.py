@@ -34,11 +34,10 @@ import json
 import os
 import statistics
 import time
-import types
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import PipelineCLIConfig, emit
 from repro.core.microbatch import make_plan
 from repro.graphs import load_dataset
 from repro.launch.train import run_gnn
@@ -77,11 +76,12 @@ def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES,
         host_epoch_s = None
         for engine in ENGINES:
             for schedule in schedules:
-                args = types.SimpleNamespace(
+                args = PipelineCLIConfig(
+                    engine=engine, schedule=schedule, chunks=chunks, stages=stages,
+                    partition=partition, pipe_devices=pipe_devices,
+                ).namespace(
                     mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
-                    stages=stages, chunks=chunks, epochs=epochs, seed=0, log_every=0,
-                    schedule=schedule, pipe_devices=pipe_devices, engine=engine,
-                    partition=partition, layer_costs=layer_costs,
+                    epochs=epochs, seed=0, log_every=0, layer_costs=layer_costs,
                 )
                 try:
                     r = run_gnn(args)
@@ -204,7 +204,7 @@ def _partition_bench(bench, *, epochs, chunks=4, dataset="cora", json_dir=None):
     opt = opt_lib.adam(1e-2)
     pipes, states, times = {}, {}, {}
     for name, balance in balances.items():
-        pipes[name] = make_engine("compiled", model, GPipeConfig(
+        pipes[name] = make_engine(model, GPipeConfig(engine="compiled",
             balance=balance, chunks=chunks, schedule="1f1b",
         ))
         params = pipes[name].init_params(jax.random.PRNGKey(0))

@@ -20,30 +20,28 @@ program, so the compiled eval path is exercised (and must agree) too.
 
 from __future__ import annotations
 
-import types
-
-from benchmarks.common import emit
+from benchmarks.common import PipelineCLIConfig, emit
 from repro.launch.train import run_gnn
+
+
+def _args(dataset, epochs, *, strategy="sequential", **pipeline):
+    """One fig4 cell's run_gnn namespace off the shared pipeline CLI bundle."""
+    return PipelineCLIConfig(**pipeline).namespace(
+        mode="gnn", dataset=dataset, backend="padded", strategy=strategy,
+        epochs=epochs, seed=0, log_every=0,
+    )
 
 
 def run(*, dataset="cora", epochs=60, strategies=("sequential", "greedy", "halo")):
     rows = []
-    base = types.SimpleNamespace(
-        mode="gnn", dataset=dataset, backend="padded", strategy="sequential",
-        stages=1, chunks=1, epochs=epochs, seed=0, log_every=0,
-    )
-    full = run_gnn(base)
+    full = run_gnn(_args(dataset, epochs))
     emit(f"fig4/{dataset}/full_batch", full["avg_epoch_s"] * 1e6,
          f"val_acc={full['val_acc']:.3f}")
     rows.append(("full", 1, full["val_acc"]))
     halo4 = None
     for strategy in strategies:
         for chunks in (2, 4):
-            args = types.SimpleNamespace(
-                mode="gnn", dataset=dataset, backend="padded", strategy=strategy,
-                stages=4, chunks=chunks, epochs=epochs, seed=0, log_every=0,
-            )
-            r = run_gnn(args)
+            r = run_gnn(_args(dataset, epochs, strategy=strategy, stages=4, chunks=chunks))
             if strategy == "halo" and chunks == 4:
                 halo4 = r  # fill-drain baseline, reused for the schedule rows
             emit(
@@ -57,12 +55,10 @@ def run(*, dataset="cora", epochs=60, strategies=("sequential", "greedy", "halo"
         if schedule == "fill_drain" and halo4 is not None:
             r = halo4  # identical config already trained above
         else:
-            args = types.SimpleNamespace(
-                mode="gnn", dataset=dataset, backend="padded", strategy="halo",
-                stages=4, chunks=4, epochs=epochs, seed=0, log_every=0,
-                schedule=schedule, pipe_devices=2,
-            )
-            r = run_gnn(args)
+            r = run_gnn(_args(
+                dataset, epochs, strategy="halo",
+                stages=4, chunks=4, schedule=schedule, pipe_devices=2,
+            ))
         emit(
             f"fig4/{dataset}/halo_chunks4_{schedule}",
             r["avg_epoch_s"] * 1e6,
@@ -77,12 +73,10 @@ def run(*, dataset="cora", epochs=60, strategies=("sequential", "greedy", "halo"
     for schedule, pipe_devices in (
         ("fill_drain", None), ("1f1b", None), ("interleaved", 2), ("zb-h1", None),
     ):
-        args = types.SimpleNamespace(
-            mode="gnn", dataset=dataset, backend="padded", strategy="halo",
-            stages=4, chunks=4, epochs=epochs, seed=0, log_every=0,
-            schedule=schedule, pipe_devices=pipe_devices, engine="compiled",
-        )
-        r = run_gnn(args)
+        r = run_gnn(_args(
+            dataset, epochs, strategy="halo", engine="compiled",
+            stages=4, chunks=4, schedule=schedule, pipe_devices=pipe_devices,
+        ))
         emit(
             f"fig4/{dataset}/halo_chunks4_compiled_{schedule}",
             r["avg_epoch_s"] * 1e6,
@@ -93,13 +87,10 @@ def run(*, dataset="cora", epochs=60, strategies=("sequential", "greedy", "halo"
     # partition-invariance column: the SAME halo config under the profiled
     # (cost-model) balance — moving layer boundaries must not move accuracy,
     # only the per-stage cost profile (partitioning reorders work, never math)
-    args = types.SimpleNamespace(
-        mode="gnn", dataset=dataset, backend="padded", strategy="halo",
-        stages=4, chunks=4, epochs=epochs, seed=0, log_every=0,
-        schedule="1f1b", pipe_devices=None, engine="compiled",
-        partition="profiled",
-    )
-    r = run_gnn(args)
+    r = run_gnn(_args(
+        dataset, epochs, strategy="halo", engine="compiled",
+        stages=4, chunks=4, schedule="1f1b", partition="profiled",
+    ))
     emit(
         f"fig4/{dataset}/halo_chunks4_compiled_1f1b_profiled",
         r["avg_epoch_s"] * 1e6,

@@ -11,8 +11,8 @@ the host queue loop): same accuracy, faster epochs.
 """
 
 import argparse
-import types
 
+from repro.core.cli import PipelineCLIConfig
 from repro.core.schedule import get_schedule
 from repro.launch.train import run_gnn
 
@@ -41,13 +41,14 @@ def main():
     ap.add_argument("--epochs", type=int, default=60)
     args = ap.parse_args()
 
-    def cfg(**kw):
-        base = dict(mode="gnn", dataset=args.dataset, backend="padded",
-                    strategy="sequential", stages=1, chunks=1,
-                    epochs=args.epochs, seed=0, log_every=0,
-                    schedule="fill_drain", pipe_devices=2, engine="host")
-        base.update(kw)
-        return types.SimpleNamespace(**base)
+    def cfg(*, strategy="sequential", **pipeline):
+        # one shared flag bundle (repro.core.cli) instead of a hand-rolled
+        # namespace — the same surface the CLI drivers and benchmarks use
+        pipeline.setdefault("pipe_devices", 2)
+        return PipelineCLIConfig(**pipeline).namespace(
+            mode="gnn", dataset=args.dataset, backend="padded",
+            strategy=strategy, epochs=args.epochs, seed=0, log_every=0,
+        )
 
     print("== full batch (single device) ==")
     full = run_gnn(cfg())

@@ -16,7 +16,12 @@ two implementations ship:
     stages the same program body runs under ``jax.vmap(axis_name="stage")``
     — identical collective semantics, still one fused XLA program.
 
-``make_engine("host" | "compiled", model, config)`` picks one.
+``make_engine(model, config)`` picks one via ``config.engine`` (the legacy
+``make_engine("host" | "compiled", model, config)`` spelling survives as a
+deprecated shim). Both engines expose ``compile_eval(params, graph) ->
+EvalProgram`` — a per-shape forward-only program handle with the params
+bound once — which ``evaluate`` and the serving frontend
+(``repro.launch.serve_gnn``) share.
 
 GPipe's faithful semantics:
 
@@ -92,10 +97,94 @@ class GPipeConfig:
     # rotations + a physical device order); validated against the lowering's
     # ring check at engine construction
     placement: Placement | None = None
+    engine: str = "host"  # "host" | "compiled"; consumed by make_engine
 
     @property
     def num_stages(self) -> int:
         return len(self.balance)
+
+
+@jax.jit
+def _eval_metric_head(logp, labels, masks):
+    """Shared metric head for both engines' eval programs: masked means over
+    the (chunks, n_pad) grid — padding rows and halo ghosts carry zero mask,
+    so on a lossless plan these equal the full-batch numbers bit for bit."""
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    hit = (jnp.argmax(logp, axis=-1) == labels).astype(jnp.float32)
+
+    def masked_mean(x, mask):
+        m = mask.astype(jnp.float32)
+        return jnp.sum(x * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+    return {
+        "train_loss": masked_mean(nll, masks["train"]),
+        "train_acc": masked_mean(hit, masks["train"]),
+        "val_acc": masked_mean(hit, masks["val"]),
+        "test_acc": masked_mean(hit, masks["test"]),
+    }
+
+
+class EvalProgram:
+    """Handle for ONE compiled forward-only inference program at a fixed
+    stacked-batch shape ``(chunks, n_pad, max_deg)`` — the unit of the
+    serving engine's shape bucketing.
+
+    ``engine.compile_eval(params, graph)`` compiles (or fetches the cached)
+    program for the graph's shape and ``bind``s the params: replication onto
+    the program's eval mesh happens ONCE here, not per call — the old
+    ``evaluate`` re-issued a ``device_put`` of the full param tree on every
+    call, allocation churn that dominates small-batch serving.
+    ``__call__(graph)`` runs one stacked batch and returns per-chunk
+    log-probabilities ``(chunks, n_pad, out_dim)``; ``metrics`` is the fused
+    metric head ``evaluate`` layers on top."""
+
+    def __init__(self, forward, mesh, out_dim: int, key: tuple):
+        self._forward = forward
+        self.mesh = mesh  # None on the host / lane substrates
+        self.out_dim = out_dim
+        self.key = key  # (chunks, n_pad, max_deg)
+        self._bound = None  # (params as handed in, params placed on the mesh)
+
+    @property
+    def chunks(self) -> int:
+        return self.key[0]
+
+    @property
+    def n_pad(self) -> int:
+        return self.key[1]
+
+    def bind(self, params) -> "EvalProgram":
+        """Place ``params`` for this program — replicated over the eval mesh
+        when there is one — unless the same tree object is already bound.
+        Serving binds once at warmup; every batch reuses the resident copy.
+        (Training naturally re-binds each epoch: new step, new param tree.)"""
+        if self._bound is None or self._bound[0] is not params:
+            placed = params
+            if self.mesh is not None:
+                # the eval ring places one stage per device; params coming out
+                # of a train step whose mesh spans a different device set
+                # (e.g. interleaved's 2-device ring on a 4-device host) must
+                # be re-replicated onto the eval mesh or jit rejects the mix
+                placed = jax.device_put(
+                    params, jax.sharding.NamedSharding(self.mesh, P())
+                )
+            self._bound = (params, placed)
+        return self
+
+    def __call__(self, graph):
+        """Run one stacked batch -> logp ``(chunks, n_pad, out_dim)``."""
+        if self._bound is None:
+            raise ValueError("EvalProgram: call bind(params) before __call__")
+        return self._forward(self._bound[1], graph)
+
+    def metrics(self, graph, core_mask) -> dict:
+        """The classic ``evaluate`` metric dict over the batch's core nodes."""
+        masks = {
+            "train": graph.train_mask & core_mask,
+            "val": graph.val_mask & core_mask,
+            "test": graph.test_mask & core_mask,
+        }
+        return _eval_metric_head(self(graph), graph.labels, masks)
 
 
 class PipelineEngine:
@@ -159,6 +248,26 @@ class PipelineEngine:
     ):
         raise NotImplementedError
 
+    def compile_eval(self, params: list, graph) -> EvalProgram:
+        """Compile (or fetch the cached) forward-only eval program for the
+        shape of ``graph`` — a stacked pytree with leaves ``(chunks, n_pad,
+        ...)`` such as ``StackedPlan.graph`` or a serving bucket batch — and
+        bind ``params`` to it (replicated once, reused across calls). Both
+        engines implement this, so ``--engine host|compiled`` stays symmetric
+        all the way into the serving frontend."""
+        raise NotImplementedError
+
+    def evaluate(self, params: list, plan: MicroBatchPlan) -> dict:
+        """Forward-only inference over the plan's chunks: the same metric
+        dict as ``repro.train.loop.make_eval``, produced by this engine's
+        compiled eval program. Metrics cover each chunk's core nodes; with a
+        lossless plan (halo, hops >= model depth) they equal the full-batch
+        numbers, with the paper's sequential split they reflect its dropped
+        edges."""
+        stacked = plan.stacked()
+        prog = self.compile_eval(params, stacked.graph)
+        return prog.metrics(stacked.graph, stacked.core_mask)
+
     def describe(self) -> dict:
         d = self.schedule.describe(self.config.num_stages, self.config.chunks)
         d.update(
@@ -189,6 +298,31 @@ class GPipe(PipelineEngine):
         self._bwd_b_fns = [self._make_bwd_b(s) for s in range(config.num_stages)]
         self._bwd_w_fns = [self._make_bwd_w(s) for s in range(config.num_stages)]
         self._loss_grad = jax.jit(jax.value_and_grad(_chunk_loss_sum, argnums=0, has_aux=True))
+        self._evals: dict = {}  # (chunks, n_pad, max_deg) -> EvalProgram
+
+    def compile_eval(self, params: list, graph) -> EvalProgram:
+        """Host twin of the compiled engine's eval program: one jitted
+        ``lax.scan`` over the stacked chunks applying the full layer stack
+        (eval needs no pipelining — there is no queue to keep busy)."""
+        key = (
+            graph.features.shape[0],
+            graph.features.shape[1],
+            graph.neighbors.shape[2],
+        )
+        prog = self._evals.get(key)
+        if prog is None:
+            model = self.model
+
+            def forward(params, g):
+                def body(_, chunk):
+                    return None, model.apply(params, chunk, train=False)
+
+                _, logp = lax.scan(body, None, g)
+                return logp
+
+            prog = EvalProgram(jax.jit(forward), None, model.out_dim, key)
+            self._evals[key] = prog
+        return prog.bind(params)
 
     def _stage_apply(self, s: int, stage_params: list, mb_graph, h, rngs, train: bool):
         lo, hi = self._bounds[s]
@@ -486,7 +620,7 @@ class CompiledGNNPipeline(PipelineEngine):
         super().__init__(model, config)
         self._widths: list[int] | None = None
         self._steps: dict = {}
-        self._evals: dict = {}  # (chunks, n_pad, max_deg) -> jitted eval fn
+        self._evals: dict = {}  # (chunks, n_pad, max_deg) -> EvalProgram
         self._travel_cache: dict = {}
         self._lowered: dict = {}  # chunks -> LoweredTimeline (scheduled path)
 
@@ -764,15 +898,15 @@ class CompiledGNNPipeline(PipelineEngine):
 
         return jax.jit(step)
 
-    def _build_eval(self, widths: list[int], chunks: int):
+    def _build_eval_forward(self, widths: list[int], chunks: int):
         """One jitted forward-only program (no vjp, no optimizer): the
         fill-drain forward wave lowered through the same machinery as the
         train schedules (``forward_timeline`` + ``lower_timeline(...,
         forward_only=True)``) and executed by the scheduled executor's eval
         twin — the shard_map ring with enough devices, the lane-stacked
-        substrate below it. Metrics are computed over every chunk's CORE
-        nodes (padding and halo ghosts masked out), fused into the same
-        program."""
+        substrate below it. Returns ``(jitted (params, graph) -> logp,
+        mesh)``; the metric head lives on ``EvalProgram`` so the raw
+        log-probabilities are directly servable."""
         S = self.config.num_stages
         items = forward_timeline(S, chunks)
         if self.placement is not None and self.placement.num_devices == S:
@@ -830,58 +964,30 @@ class CompiledGNNPipeline(PipelineEngine):
         else:
             mapped = local
 
-        def eval_fn(params, graph, labels, masks):
-            logp = mapped(params, graph)[..., : model.out_dim]
-            nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
-            hit = (jnp.argmax(logp, axis=-1) == labels).astype(jnp.float32)
+        def forward(params, graph):
+            return mapped(params, graph)[..., : model.out_dim]
 
-            def masked_mean(x, mask):
-                m = mask.astype(jnp.float32)
-                return jnp.sum(x * m) / jnp.maximum(jnp.sum(m), 1.0)
+        return jax.jit(forward), mesh
 
-            return {
-                "train_loss": masked_mean(nll, masks["train"]),
-                "train_acc": masked_mean(hit, masks["train"]),
-                "val_acc": masked_mean(hit, masks["val"]),
-                "test_acc": masked_mean(hit, masks["test"]),
-            }
-
-        return jax.jit(eval_fn), mesh
-
-    def evaluate(self, params: list, plan: MicroBatchPlan) -> dict:
-        """Forward-only compiled inference over the plan's chunks: the same
-        metric dict as ``repro.train.loop.make_eval``, but produced by one
-        jitted scheduled pipeline program instead of a host full-batch
-        apply — so ``--engine compiled`` validation exercises the compiled
-        path end to end. Metrics cover each chunk's core nodes; with a
-        lossless plan (halo, hops >= model depth) they equal the full-batch
-        numbers, with the paper's sequential split they reflect its dropped
-        edges."""
-        stacked = plan.stacked()
+    def compile_eval(self, params: list, graph) -> EvalProgram:
+        """Compiled-eval handle for the shape of ``graph`` (a stacked pytree,
+        leaves ``(chunks, n_pad, ...)``): one scheduled pipeline program per
+        ``(chunks, n_pad, max_deg)`` bucket, cached for the engine's
+        lifetime, with params bound (replicated once) on the handle."""
         if self._widths is None:
-            chunk0 = jax.tree_util.tree_map(lambda a: a[0], stacked.graph)
+            chunk0 = jax.tree_util.tree_map(lambda a: a[0], graph)
             self._widths = activation_widths(self.model, params, chunk0)
-        key = (stacked.chunks, stacked.n_pad, stacked.max_deg)
-        entry = self._evals.get(key)
-        if entry is None:
-            entry = self._build_eval(self._widths, stacked.chunks)
-            self._evals[key] = entry
-        fn, mesh = entry
-        if mesh is not None:
-            # the eval ring places one stage per device; params coming out of
-            # a train step whose mesh spans a different device set (e.g. the
-            # interleaved schedule's 2-device ring on a 4-device host) must
-            # be re-replicated onto the eval mesh or jit rejects the mix
-            params = jax.device_put(
-                params, jax.sharding.NamedSharding(mesh, P())
-            )
-        g = stacked.graph
-        masks = {
-            "train": g.train_mask & stacked.core_mask,
-            "val": g.val_mask & stacked.core_mask,
-            "test": g.test_mask & stacked.core_mask,
-        }
-        return fn(params, g, g.labels, masks)
+        key = (
+            graph.features.shape[0],
+            graph.features.shape[1],
+            graph.neighbors.shape[2],
+        )
+        prog = self._evals.get(key)
+        if prog is None:
+            fwd, mesh = self._build_eval_forward(self._widths, key[0])
+            prog = EvalProgram(fwd, mesh, self.model.out_dim, key)
+            self._evals[key] = prog
+        return prog.bind(params)
 
     def _travel_inputs(self, stacked):
         """(travel pytree, loss_mask) for one stacked plan, cached. Only the
@@ -966,9 +1072,35 @@ class CompiledGNNPipeline(PipelineEngine):
 ENGINES = {"host": GPipe, "compiled": CompiledGNNPipeline}
 
 
-def make_engine(name: str, model: GNNModel, config: GPipeConfig) -> PipelineEngine:
+def make_engine(model, config=None, _legacy_config=None) -> PipelineEngine:
     """Engine factory: ``host`` (paper-faithful GPipe queue loop) or
-    ``compiled`` (one jitted SPMD program)."""
+    ``compiled`` (one jitted SPMD program), selected by ``config.engine``:
+
+        make_engine(model, GPipeConfig(engine="compiled", balance=..., ...))
+
+    Serving, training and the benchmarks all construct engines from the one
+    assembled ``GPipeConfig``. The pre-serving ``make_engine(name, model,
+    config)`` spelling still works as a thin deprecated shim (the positional
+    name wins over ``config.engine`` there, preserving old call sites)."""
+    if isinstance(model, str):
+        import warnings
+
+        warnings.warn(
+            "make_engine(name, model, config) is deprecated; use "
+            "make_engine(model, config) with config.engine set",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        name, model, config = model, config, _legacy_config
+        if config is None:
+            raise TypeError("make_engine(name, model, config): config is required")
+    else:
+        if not isinstance(config, GPipeConfig):
+            raise TypeError(
+                f"make_engine(model, config) expects a GPipeConfig, got "
+                f"{type(config).__name__}"
+            )
+        name = config.engine
     try:
         cls = ENGINES[name]
     except KeyError:

@@ -112,6 +112,28 @@ def expand_halo(g: GraphBatch, core: np.ndarray, hops: int) -> tuple[np.ndarray,
     return nodes, core_mask
 
 
+def ego_subgraph(
+    g: GraphBatch, seeds: np.ndarray, hops: int
+) -> tuple[GraphBatch, np.ndarray]:
+    """The ``hops``-hop ego-subgraph around ``seeds`` plus the seeds' local
+    row indices — the serving frontend's extraction step.
+
+    With ``hops`` >= the model's receptive depth the halo is lossless:
+    every message a seed aggregates exists in the sub-graph, so its
+    prediction equals the full-graph one (bit-identically on the padded
+    backend — ``subgraph`` preserves each kept node's neighbor column order
+    and trailing pad columns contribute exact zeros)."""
+    from repro.graphs.data import subgraph
+
+    seeds = np.asarray(seeds)
+    nodes, _ = expand_halo(g, seeds, hops)
+    sub = subgraph(g, nodes)
+    # expand_halo returns nodes as flatnonzero output — sorted ascending —
+    # so the seeds' local rows come from a binary search
+    rows = np.searchsorted(nodes, seeds)
+    return sub, rows
+
+
 def edge_cut_fraction(g: GraphBatch, parts: list[np.ndarray]) -> float:
     """Fraction of (directed, non-self) edge slots crossing part boundaries —
     the information the paper's sequential split throws away."""

@@ -49,8 +49,9 @@ import numpy as np
 
 
 def run_gnn(args) -> dict:
+    from repro.core.cli import PipelineCLIConfig
     from repro.core.microbatch import make_plan
-    from repro.core.pipeline import GPipeConfig, make_engine
+    from repro.core.pipeline import make_engine
     from repro.graphs import load_dataset
     from repro.models.gnn.net import build_paper_gat
     from repro.train import optimizer as opt_lib
@@ -79,15 +80,12 @@ def run_gnn(args) -> dict:
         print(out)
         return out
 
-    # pipeline path (paper §6)
-    schedule = getattr(args, "schedule", "fill_drain")
-    engine = getattr(args, "engine", "host")
-    pipe_devices = getattr(args, "pipe_devices", None)
-    if schedule == "interleaved" and pipe_devices is None:
-        pipe_devices = 2  # stages -> V = stages/2 virtual stages per device
+    # pipeline path (paper §6) — flag bundle lifted off the shared CLI surface
+    cli = PipelineCLIConfig.from_args(args)
+    schedule, engine, partition = cli.schedule, cli.engine, cli.partition
+    pipe_devices = cli.resolved_pipe_devices
     plan = make_plan(g, args.chunks, strategy=args.strategy, halo_hops=2, seed=args.seed)
 
-    partition = getattr(args, "partition", "uniform")
     if partition == "profiled":
         # cost-model-driven balance: measure per-layer fwd/B/W cost on one
         # padded chunk of THIS plan (the shape the engines dispatch per
@@ -117,20 +115,9 @@ def run_gnn(args) -> dict:
                   f"W {row['bwd_w_s'] * 1e3:7.3f}")
         print(f"[gnn] profiled balance={balance} predicted_step={predicted * 1e3:.2f}ms")
     else:
-        # layer-count split of the 6-layer sequential paper model
-        balance = {2: (3, 3), 3: (2, 2, 2), 4: (2, 1, 1, 2), 6: (1,) * 6}[args.stages]
+        balance = cli.uniform_balance()
 
-    placement = None
-    placement_arg = getattr(args, "placement", None)
-    if placement_arg:
-        from repro.core.schedule import Placement
-
-        placement = Placement(tuple(int(x) for x in placement_arg.split(",")))
-
-    pipe = make_engine(engine, model, GPipeConfig(
-        balance=balance, chunks=args.chunks,
-        schedule=schedule, num_devices=pipe_devices, placement=placement,
-    ))
+    pipe = make_engine(model, cli.gpipe_config(balance))
     print(f"[gnn] engine={engine} stages={args.stages} chunks={args.chunks} "
           f"strategy={args.strategy} schedule={schedule} balance={balance} "
           f"edge_cut={plan.edge_cut:.3f} rebuild_s={plan.rebuild_seconds:.3f} "
@@ -285,23 +272,9 @@ def main():
     ap.add_argument("--full-arch", action="store_true", help="use the full (not smoke) config")
     ap.add_argument("--backend", default="padded", choices=["padded", "dense", "pallas"])
     ap.add_argument("--strategy", default="sequential")
-    ap.add_argument("--engine", default="host", choices=["host", "compiled"],
-                    help="gnn pipeline engine: host-driven GPipe queue loop or "
-                         "one compiled SPMD program (shard_map/ppermute); both "
-                         "accept any --schedule")
-    ap.add_argument("--schedule", default="fill_drain",
-                    choices=["fill_drain", "gpipe", "1f1b", "interleaved", "zb-h1"])
-    ap.add_argument("--pipe-devices", type=int, default=None,
-                    help="interleaved: physical devices (virtual stages = stages/devices)")
-    ap.add_argument("--partition", default="uniform", choices=["uniform", "profiled"],
-                    help="gnn stage balance: layer-count split or the cost-model "
-                         "partitioner (profiles per-layer fwd/B/W on a padded chunk, "
-                         "minimizes the schedule's weighted makespan)")
-    ap.add_argument("--placement", default=None,
-                    help="gnn stage->device ring placement as comma ints, e.g. "
-                         "'1,2,3,0' (validated against the lowering's ring check)")
-    ap.add_argument("--stages", type=int, default=1)
-    ap.add_argument("--chunks", type=int, default=1)
+    from repro.core.cli import add_pipeline_args
+
+    add_pipeline_args(ap)  # --engine/--schedule/--stages/--chunks/--pipe-devices/--partition/--placement
     ap.add_argument("--epochs", type=int, default=300)
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq", type=int, default=256)

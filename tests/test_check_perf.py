@@ -15,7 +15,7 @@ import pytest
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from benchmarks.check_perf import check, normalized_ratios  # noqa: E402
+from benchmarks.check_perf import check, check_serving, normalized_ratios  # noqa: E402
 
 
 def _row(step_s, *, bubble=0.4, peak=8, peak_acc=16):
@@ -182,3 +182,76 @@ def test_partition_gate_coverage():
     assert any(
         f.startswith("partition:") and "no uniform row" in f for f in failures
     ), failures
+
+
+# ----------------------------------------------------------- serving gate --
+
+
+def _serve_row(p99=0.12, call=0.04, *, qps=45.0, queries=250):
+    return {
+        "p99_s": p99,
+        "p50_s": p99 / 3,
+        "eval_call_s": call,
+        "achieved_qps": qps,
+        "queries": queries,
+    }
+
+
+def _serve_table(**rows):
+    return {"rows": {f"serving/{k}": v for k, v in rows.items()}}
+
+
+def test_serving_gate_passes_on_identical_tables():
+    t = _serve_table(cora=_serve_row())
+    assert check_serving(t, t, threshold=2.0) == []
+
+
+def test_serving_gate_p99_ratio_regression():
+    """p99 is compared as a ratio over the run's own warm eval_call_s, so a
+    uniformly slower machine cancels out — only a genuinely worse
+    p99-to-compute ratio trips the gate."""
+    base = _serve_table(cora=_serve_row(p99=0.12, call=0.04))  # 3.0x
+    slower_machine = _serve_table(cora=_serve_row(p99=0.24, call=0.08))  # still 3.0x
+    assert check_serving(base, slower_machine, threshold=2.0) == []
+    regressed = _serve_table(cora=_serve_row(p99=0.30, call=0.04))  # 7.5x
+    failures = check_serving(base, regressed, threshold=2.0)
+    assert any(f.startswith("serving:") and "p99/eval_call" in f for f in failures)
+
+
+def test_serving_gate_coverage_fails_by_name():
+    base = _serve_table(cora=_serve_row(), karate=_serve_row())
+    cur = _serve_table(cora=_serve_row())
+    failures = check_serving(base, cur, threshold=2.0)
+    assert any(
+        f.startswith("serving-coverage:") and "serving/karate" in f for f in failures
+    ), failures
+    failures = check_serving(base, {"rows": {}}, threshold=2.0)
+    assert any("no serving/ rows" in f for f in failures), failures
+
+
+@pytest.mark.parametrize("side", ["baseline", "current"])
+def test_serving_gate_missing_normalizer_fails_by_name(side):
+    good = _serve_table(cora=_serve_row())
+    broken = _serve_table(cora={**_serve_row(), "eval_call_s": 0.0})
+    baseline, current = (broken, good) if side == "baseline" else (good, broken)
+    failures = check_serving(baseline, current, threshold=2.0)
+    assert any(
+        f.startswith(f"serving-normalizer({side}):") and "non-positive" in f
+        for f in failures
+    ), failures
+
+
+def test_serving_gate_broken_run_fails():
+    t = _serve_table(cora=_serve_row())
+    dead = _serve_table(cora=_serve_row(qps=0.0, queries=0))
+    failures = check_serving(t, dead, threshold=2.0)
+    assert any("served no queries" in f for f in failures)
+    assert any("achieved_qps" in f for f in failures)
+
+
+def test_serving_gate_new_row_needs_no_baseline():
+    """A row the baseline has never seen is checked for sanity but not for
+    regression — committing the baseline is a separate, deliberate step."""
+    base = _serve_table(cora=_serve_row())
+    cur = _serve_table(cora=_serve_row(), pubmed=_serve_row(p99=9.0, call=0.01))
+    assert check_serving(base, cur, threshold=2.0) == []

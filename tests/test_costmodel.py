@@ -179,7 +179,7 @@ def test_profiled_balance_runs_through_engine(karate_chunk):
     bal, _ = choose_balance(costs, 4, get_schedule("1f1b"), 2)
     assert sum(bal) == len(model.layers)
     plan = make_plan(g, 2, strategy="sequential")
-    pipe = make_engine("compiled", model, GPipeConfig(
+    pipe = make_engine(model, GPipeConfig(engine="compiled",
         balance=bal, chunks=2, schedule="1f1b",
     ))
     opt = opt_lib.adam(1e-2)

@@ -73,8 +73,8 @@ def test_compiled_engine_matches_host(setup, strategy):
     opt = opt_lib.adam(1e-2)
     C = 4
     plan = make_plan(g, C, strategy=strategy, halo_hops=2)
-    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
-    comp = make_engine("compiled", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
+    host = make_engine(m, GPipeConfig(engine="host", balance=(2, 1, 1, 2), chunks=C))
+    comp = make_engine(m, GPipeConfig(engine="compiled", balance=(2, 1, 1, 2), chunks=C))
     ph = pc = params
     oh = oc = opt.init(params)
     key = jax.random.PRNGKey(42)
@@ -94,7 +94,7 @@ def test_compiled_engine_trains(setup):
     host-engine learning test, rerun through the fused program)."""
     g, m, _ = setup
     opt = opt_lib.adam(1e-2)
-    pipe = make_engine("compiled", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=2))
+    pipe = make_engine(m, GPipeConfig(engine="compiled", balance=(2, 1, 1, 2), chunks=2))
     plan = make_plan(g, 2, strategy="halo", halo_hops=2)
     key = jax.random.PRNGKey(42)
     params = pipe.init_params(key)
@@ -110,7 +110,7 @@ def test_compiled_engine_trains(setup):
 def test_compiled_engine_stats_and_describe(setup):
     g, m, params = setup
     opt = opt_lib.adam(1e-2)
-    pipe = make_engine("compiled", m, GPipeConfig(balance=(3, 3), chunks=2))
+    pipe = make_engine(m, GPipeConfig(engine="compiled", balance=(3, 3), chunks=2))
     plan = make_plan(g, 2, strategy="sequential")
     stats = {}
     pipe.train_step(params, opt.init(params), plan, jax.random.PRNGKey(0), opt, stats=stats)
@@ -122,14 +122,39 @@ def test_compiled_engine_stats_and_describe(setup):
 def test_engine_factory_and_config_validation(setup):
     _, m, _ = setup
     with pytest.raises(KeyError):
-        make_engine("nope", m, GPipeConfig(balance=(3, 3), chunks=2))
+        make_engine(m, GPipeConfig(engine="nope", balance=(3, 3), chunks=2))
     # both engines accept every schedule; interleaved still needs num_devices
     with pytest.raises(ValueError):
-        make_engine("compiled", m, GPipeConfig(balance=(3, 3), chunks=2, schedule="interleaved"))
-    comp = make_engine("compiled", m, GPipeConfig(balance=(3, 3), chunks=2, schedule="1f1b"))
+        make_engine(m, GPipeConfig(engine="compiled", balance=(3, 3), chunks=2, schedule="interleaved"))
+    comp = make_engine(m, GPipeConfig(engine="compiled", balance=(3, 3), chunks=2, schedule="1f1b"))
     assert comp.describe()["schedule"] == "1f1b"
-    host = make_engine("host", m, GPipeConfig(balance=(3, 3), chunks=2, schedule="1f1b"))
+    host = make_engine(m, GPipeConfig(engine="host", balance=(3, 3), chunks=2, schedule="1f1b"))
     assert host.describe()["engine"] == "host"
+
+
+def test_make_engine_requires_config(setup):
+    """The redesigned factory: model first, assembled GPipeConfig second —
+    anything else (a bare dict, a missing config) is a TypeError, not a
+    silent default."""
+    _, m, _ = setup
+    with pytest.raises(TypeError):
+        make_engine(m)
+    with pytest.raises(TypeError):
+        make_engine(m, {"engine": "host", "balance": (3, 3)})
+
+
+def test_make_engine_legacy_shim(setup):
+    """make_engine("host", model, config) still works but warns: the engine
+    name now lives on GPipeConfig.engine and the positional-name form is
+    deprecated."""
+    _, m, _ = setup
+    with pytest.warns(DeprecationWarning):
+        pipe = make_engine("host", m, GPipeConfig(balance=(3, 3), chunks=2))
+    assert pipe.describe()["engine"] == "host"
+    assert pipe.config.engine == "host"
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(KeyError):
+            make_engine("nope", m, GPipeConfig(balance=(3, 3), chunks=2))
 
 
 # ------------------------------------------- scheduled compiled executor --
@@ -158,8 +183,8 @@ def test_compiled_schedules_match_host_fill_drain(setup, schedule, pipe_devices)
     opt = opt_lib.adam(1e-2)
     C = 4
     plan = make_plan(g, C, strategy="halo", halo_hops=2)
-    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
-    comp = make_engine("compiled", m, GPipeConfig(
+    host = make_engine(m, GPipeConfig(engine="host", balance=(2, 1, 1, 2), chunks=C))
+    comp = make_engine(m, GPipeConfig(engine="compiled",
         balance=(2, 1, 1, 2), chunks=C, schedule=schedule, num_devices=pipe_devices,
     ))
     ph = pc = params
@@ -182,7 +207,7 @@ def test_scheduled_engine_peak_live_below_fill_drain(setup):
     opt = opt_lib.adam(1e-2)
     C = 4
     plan = make_plan(g, C, strategy="halo", halo_hops=2)
-    pipe = make_engine("compiled", m, GPipeConfig(
+    pipe = make_engine(m, GPipeConfig(engine="compiled",
         balance=(2, 1, 1, 2), chunks=C, schedule="1f1b",
     ))
     stats = {}
@@ -204,7 +229,7 @@ def test_zb_h1_engine_peak_live_not_above_1f1b(setup):
     plan = make_plan(g, C, strategy="halo", halo_hops=2)
     peaks = {}
     for schedule in ("1f1b", "zb-h1"):
-        pipe = make_engine("compiled", m, GPipeConfig(
+        pipe = make_engine(m, GPipeConfig(engine="compiled",
             balance=(2, 1, 1, 2), chunks=C, schedule=schedule,
         ))
         stats = {}
@@ -245,8 +270,8 @@ def test_placed_schedules_match_host_fill_drain(setup, schedule, pipe_devices, r
     C = 4
     plan = make_plan(g, C, strategy="halo", halo_hops=2)
     placement = Placement.ring(4, pipe_devices, rotation=rotation)
-    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
-    comp = make_engine("compiled", m, GPipeConfig(
+    host = make_engine(m, GPipeConfig(engine="host", balance=(2, 1, 1, 2), chunks=C))
+    comp = make_engine(m, GPipeConfig(engine="compiled",
         balance=(2, 1, 1, 2), chunks=C, schedule=schedule,
         num_devices=pipe_devices, placement=placement,
     ))
@@ -271,8 +296,8 @@ def test_any_partition_matches_host_fill_drain(setup, balance):
     opt = opt_lib.adam(1e-2)
     C = 4
     plan = make_plan(g, C, strategy="halo", halo_hops=2)
-    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
-    comp = make_engine("compiled", m, GPipeConfig(
+    host = make_engine(m, GPipeConfig(engine="host", balance=(2, 1, 1, 2), chunks=C))
+    comp = make_engine(m, GPipeConfig(engine="compiled",
         balance=balance, chunks=C, schedule="1f1b",
     ))
     ph = pc = params
@@ -296,8 +321,8 @@ def test_host_engine_with_placement_matches_baseline(setup):
     opt = opt_lib.adam(1e-2)
     C = 4
     plan = make_plan(g, C, strategy="halo", halo_hops=2)
-    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
-    placed = make_engine("host", m, GPipeConfig(
+    host = make_engine(m, GPipeConfig(engine="host", balance=(2, 1, 1, 2), chunks=C))
+    placed = make_engine(m, GPipeConfig(engine="host",
         balance=(2, 1, 1, 2), chunks=C, schedule="zb-h1",
         devices=tuple(jax.devices()) * 4,  # cycle the host's devices
         placement=Placement.ring(4, rotation=2, device_order=(2, 0, 3, 1)),
@@ -318,11 +343,11 @@ def test_engine_rejects_incompatible_placement(setup):
 
     _, m, _ = setup
     with pytest.raises(ValueError):  # not ring-compatible
-        make_engine("compiled", m, GPipeConfig(
+        make_engine(m, GPipeConfig(engine="compiled",
             balance=(2, 1, 1, 2), chunks=4, placement=Placement((0, 2, 1, 3)),
         ))
     with pytest.raises(ValueError):  # device count != schedule's placement
-        make_engine("host", m, GPipeConfig(
+        make_engine(m, GPipeConfig(engine="host",
             balance=(2, 1, 1, 2), chunks=4, schedule="interleaved",
             num_devices=2, placement=Placement.ring(4),
         ))
@@ -334,7 +359,7 @@ def test_scheduled_engine_rejects_illegal_combo(setup):
     g, m, params = setup
     opt = opt_lib.adam(1e-2)
     plan = make_plan(g, 3, strategy="sequential")
-    pipe = make_engine("compiled", m, GPipeConfig(
+    pipe = make_engine(m, GPipeConfig(engine="compiled",
         balance=(2, 1, 1, 2), chunks=3, schedule="interleaved", num_devices=2,
     ))
     with pytest.raises(ValueError):
@@ -353,7 +378,7 @@ def test_compiled_evaluate_matches_host_eval(setup):
 
     g, m, params = setup
     plan = make_plan(g, 3, strategy="halo", halo_hops=2)
-    pipe = make_engine("compiled", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=3))
+    pipe = make_engine(m, GPipeConfig(engine="compiled", balance=(2, 1, 1, 2), chunks=3))
     got = pipe.evaluate(params, plan)
     want = make_eval(m)(params, g)
     assert set(got) == {"train_loss", "train_acc", "val_acc", "test_acc"}
@@ -368,7 +393,7 @@ def test_compiled_evaluate_after_training(setup):
     program is cached per plan shape."""
     g, m, _ = setup
     opt = opt_lib.adam(1e-2)
-    pipe = make_engine("compiled", m, GPipeConfig(
+    pipe = make_engine(m, GPipeConfig(engine="compiled",
         balance=(2, 1, 1, 2), chunks=2, schedule="zb-h1",
     ))
     plan = make_plan(g, 2, strategy="halo", halo_hops=2)
@@ -387,6 +412,38 @@ def test_compiled_evaluate_after_training(setup):
     want = float(((jnp.argmax(logp, -1) == g.labels) * g.train_mask).sum()
                  / g.train_mask.sum())
     assert abs(accs[-1] - want) < 1e-5
+
+
+@pytest.mark.parametrize("engine", ["host", "compiled"])
+def test_eval_program_binds_params_once(setup, engine, monkeypatch):
+    """The re-replication bugfix: ``compile_eval`` returns a bound
+    EvalProgram and repeated calls with the *same params object* must not
+    device_put the param tree again — binding is identity-cached, so a
+    serving loop pays replication once per param version, not per batch.
+    (On 1 device the eval mesh is absent and the count is zero throughout;
+    the 4-forced-device serving test checks the mesh path.)"""
+    g, m, params = setup
+    plan = make_plan(g, 2, strategy="halo", halo_hops=2)
+    pipe = make_engine(m, GPipeConfig(engine=engine, balance=(3, 3), chunks=2))
+    first = pipe.evaluate(params, plan)  # compile + first bind outside the count
+
+    calls = []
+    real_put = jax.device_put
+
+    def counting_put(*args, **kwargs):
+        calls.append(1)
+        return real_put(*args, **kwargs)
+
+    monkeypatch.setattr(jax, "device_put", counting_put)
+    again = pipe.evaluate(params, plan)
+    assert not calls, f"evaluate re-replicated params: {len(calls)} device_puts"
+    for k in first:
+        assert float(first[k]) == float(again[k]), k
+    # same shape + same params -> the exact same cached program object
+    stacked = plan.stacked()
+    assert pipe.compile_eval(params, stacked.graph) is pipe.compile_eval(
+        params, stacked.graph
+    )
 
 
 # ------------------------------------------------ ragged / empty chunks --
@@ -439,8 +496,8 @@ def test_empty_chunk_trains_identically_on_both_engines(setup, schedule):
     g, m, params = setup
     opt = opt_lib.adam(1e-2)
     plan = _plan_with_empty_chunk(g, chunks=3)  # C = 4 incl. empty
-    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=4))
-    comp = make_engine("compiled", m, GPipeConfig(
+    host = make_engine(m, GPipeConfig(engine="host", balance=(2, 1, 1, 2), chunks=4))
+    comp = make_engine(m, GPipeConfig(engine="compiled",
         balance=(2, 1, 1, 2), chunks=4, schedule=schedule,
     ))
     ph = pc = params
@@ -547,10 +604,10 @@ def test_compiled_engine_matches_host_multidevice():
     opt = opt_lib.adam(1e-2)
     C = 4
     plan = make_plan(g, C, strategy="halo", halo_hops=2)
-    host = make_engine("host", m, GPipeConfig(balance=(2, 1, 1, 2), chunks=C))
+    host = make_engine(m, GPipeConfig(engine="host", balance=(2, 1, 1, 2), chunks=C))
     for schedule, nd in (("fill_drain", None), ("1f1b", None),
                          ("interleaved", 2), ("zb-h1", None)):
-        comp = make_engine("compiled", m, GPipeConfig(
+        comp = make_engine(m, GPipeConfig(engine="compiled",
             balance=(2, 1, 1, 2), chunks=C, schedule=schedule, num_devices=nd))
         ph = pc = params
         oh = oc = opt.init(params)
