@@ -26,6 +26,13 @@ regressed:
     comparison is run-internal, like the zero-bubble gate, so machine speed
     cancels). Missing or zero host fill-drain normalizer rows fail with a
     named-row error instead of silently shrinking the comparison set;
+  * **sparse** — the degree-bucketed pallas backend's compiled step on the
+    power-law fixture must beat the padded layout's STRICTLY in the same
+    run (``sparse/{padded|bucketed}/chunksC`` rows — run-internal, so
+    machine speed cancels), and BOTH rows must report ``updates_match``:
+    fig3 asserts each measured config's one-step update against a host
+    fill-drain padded reference at oracle tolerance, so a layout that got
+    fast by computing something else fails here, not in prod;
   * **zero-bubble** — at every chunk count >= 4 the compiled zb-h1 row must
     beat or match the same run's compiled 1F1B step time (within the same
     ``--threshold`` slack the speed gate uses), its bubble fraction must sit
@@ -44,6 +51,13 @@ rule), report a positive achieved throughput, and keep its p99 latency —
 normalized by the same run's warm single-batch eval call time, so machine
 speed cancels exactly like the host-normalized fig3 ratios — within
 ``--serving-threshold`` of the baseline's normalized p99.
+
+And the **kernel microbench** table (``BENCH_kernels.json``, produced by
+``benchmarks.run --only kernels --json-out``): pass ``--kernels-current``
+to check the padded-vs-degree-bucketed aggregation op rows — coverage,
+output agreement, a strict run-internal bucketed win, and the
+bucketed/padded time ratio vs the committed baseline (see
+``check_kernels``).
 
 Intentional regressions (e.g. trading speed for a feature) are overridden by
 applying the ``perf-regression-ok`` label to the PR — the CI job skips the
@@ -67,6 +81,7 @@ from pathlib import Path
 
 DEFAULT_BASELINE = Path(__file__).resolve().parent / "BENCH_fig3.json"
 DEFAULT_SERVING_BASELINE = Path(__file__).resolve().parent / "BENCH_serve.json"
+DEFAULT_KERNELS_BASELINE = Path(__file__).resolve().parent / "BENCH_kernels.json"
 
 
 def _chunks_of(key: str) -> int:
@@ -107,7 +122,7 @@ def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) ->
     b_rows, c_rows = baseline["rows"], current["rows"]
 
     for key in sorted(b_rows):
-        if key.startswith(("compiled/", "partition/")) and key not in c_rows:
+        if key.startswith(("compiled/", "partition/", "sparse/")) and key not in c_rows:
             failures.append(f"coverage: baseline row {key} missing from current run")
 
     if absolute:
@@ -214,6 +229,31 @@ def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) ->
                 f"the uniform split's {uni['step_s']:.4f}s "
                 f"(balance {row.get('balance')} vs {uni.get('balance')})"
             )
+
+    # sparse gate: the degree-bucketed pallas backend must beat the padded
+    # layout strictly in the same run, and both measured configs' one-step
+    # updates must have matched the host fill-drain padded reference at
+    # oracle tolerance (fig3 computes updates_match in the SAME run it
+    # times, so speed can never be bought with wrong math unnoticed)
+    for key, row in sorted(c_rows.items()):
+        if not key.startswith("sparse/bucketed/"):
+            continue
+        pad = c_rows.get(f"sparse/padded/chunks{_chunks_of(key)}")
+        if pad is None:
+            failures.append(f"sparse: {key} has no padded row to compare")
+            continue
+        if not row["step_s"] < pad["step_s"]:
+            failures.append(
+                f"sparse: {key} step {row['step_s']:.4f}s not strictly below "
+                f"the padded layout's {pad['step_s']:.4f}s"
+            )
+        for name, r in (("bucketed", row), ("padded", pad)):
+            if not r.get("updates_match"):
+                failures.append(
+                    f"sparse: {key.rsplit('/', 2)[0]}/{name} update diverged from "
+                    f"the host fill-drain reference "
+                    f"(max_update_diff={r.get('max_update_diff')!r})"
+                )
     return failures
 
 
@@ -282,6 +322,79 @@ def check_serving(baseline: dict, current: dict, *, threshold: float) -> list[st
     return failures
 
 
+def check_kernels(baseline: dict, current: dict, *, threshold: float) -> list[str]:
+    """The kernel-microbench gate over ``BENCH_kernels.json`` tables.
+
+    Covers the padded-vs-degree-bucketed aggregation op rows
+    (``kernels/{spmm|gat}/{padded|bucketed}``, produced by
+    ``benchmarks.kernels_bench`` at the skewed-fixture shapes). Rules:
+
+      * coverage — every ``kernels/`` row in the baseline must exist in the
+        current run, which must contain at least one (fail-by-name);
+      * correctness — each bucketed row must report ``outputs_match``: the
+        bench compares the bucketed op's output against the padded op's on
+        the same graph at float tolerance in the same run it times;
+      * sparse win — per op family the bucketed op's time must be STRICTLY
+        below the padded op's in the same run (run-internal, so machine
+        speed and interpret-vs-compiled mode cancel);
+      * ratio — the bucketed/padded time ratio must stay within
+        ``threshold`` of the baseline's ratio (the machine-cancelling
+        regression check: a bucketed path that silently lost half its win
+        still "beats padded" but fails here)."""
+    failures: list[str] = []
+    b_rows = {k: v for k, v in baseline.get("rows", {}).items() if k.startswith("kernels/")}
+    c_rows = {k: v for k, v in current.get("rows", {}).items() if k.startswith("kernels/")}
+
+    for key in sorted(b_rows):
+        if key not in c_rows:
+            failures.append(f"kernels-coverage: baseline row {key} missing from current run")
+    if not c_rows:
+        failures.append("kernels-coverage: current run has no kernels/ rows")
+
+    def ratio(rows, which):
+        for key, row in sorted(rows.items()):
+            if not key.endswith("/bucketed"):
+                continue
+            pad = rows.get(key.rsplit("/", 1)[0] + "/padded")
+            if pad is None:
+                failures.append(f"kernels({which}): {key} has no padded row to compare")
+                continue
+            if not pad["t_us"] > 0:
+                failures.append(
+                    f"kernels({which}): {key} padded normalizer t_us "
+                    f"{pad['t_us']!r} not positive"
+                )
+                continue
+            yield key, row, row["t_us"] / pad["t_us"]
+
+    c_ratios = {}
+    for key, row, r in ratio(c_rows, "current"):
+        c_ratios[key] = r
+        if not row.get("outputs_match"):
+            failures.append(
+                f"kernels: {key} output diverged from the padded op's "
+                f"(max_abs_diff={row.get('max_abs_diff')!r})"
+            )
+        if not r < 1.0:
+            failures.append(
+                f"kernels: {key} at {r:.2f}x the padded op's time — the "
+                f"bucketed layout must win strictly at the skewed shapes"
+            )
+    for key, _, base in ratio(b_rows, "baseline"):
+        cur = c_ratios.get(key)
+        if cur is None:
+            continue  # coverage failure already recorded above
+        status = "ok"
+        if cur > base * threshold:
+            status = f"REGRESSED >{(threshold - 1):.0%}"
+            failures.append(
+                f"kernels: {key} bucketed/padded ratio {cur:.3f} vs baseline "
+                f"{base:.3f} (allowed {base * threshold:.3f})"
+            )
+        print(f"  {key:40s} baseline {base:8.3f}x  current {cur:8.3f}x  {status}")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
@@ -297,9 +410,15 @@ def main() -> int:
     ap.add_argument("--serving-threshold", type=float, default=2.0,
                     help="max allowed normalized-p99 slowdown factor for serving rows "
                          "(looser than --threshold: open-loop queueing tails are noisy)")
+    ap.add_argument("--kernels-baseline", default=str(DEFAULT_KERNELS_BASELINE))
+    ap.add_argument("--kernels-current", default=None,
+                    help="fresh BENCH_kernels.json from benchmarks.run --only kernels --json-out")
+    ap.add_argument("--kernels-threshold", type=float, default=1.30,
+                    help="max allowed bucketed/padded ratio growth for kernel rows "
+                         "(microbench medians are noisier than pipeline steps)")
     args = ap.parse_args()
-    if args.current is None and args.serving_current is None:
-        ap.error("provide --current and/or --serving-current")
+    if args.current is None and args.serving_current is None and args.kernels_current is None:
+        ap.error("provide --current, --serving-current and/or --kernels-current")
 
     failures = []
     if args.current is not None:
@@ -320,12 +439,23 @@ def main() -> int:
         failures += check_serving(
             serving_baseline, serving_current, threshold=args.serving_threshold
         )
+    if args.kernels_current is not None:
+        with open(args.kernels_baseline) as f:
+            kernels_baseline = json.load(f)
+        with open(args.kernels_current) as f:
+            kernels_current = json.load(f)
+        print(f"kernels gate: baseline={args.kernels_baseline} "
+              f"threshold={args.kernels_threshold:.2f} (bucketed / padded op time)")
+        failures += check_kernels(
+            kernels_baseline, kernels_current, threshold=args.kernels_threshold
+        )
     if failures:
         print("\nPERF GATE FAILED:")
         for msg in failures:
             print(f"  - {msg}")
         print("(intentional? apply the 'perf-regression-ok' PR label and "
-              "commit a refreshed benchmarks/BENCH_fig3.json / BENCH_serve.json)")
+              "commit a refreshed benchmarks/BENCH_fig3.json / BENCH_serve.json "
+              "/ BENCH_kernels.json)")
         return 1
     print("perf gate passed")
     return 0

@@ -27,7 +27,7 @@ from repro.launch.train import run_gnn
 def _args(dataset, epochs, *, strategy="sequential", **pipeline):
     """One fig4 cell's run_gnn namespace off the shared pipeline CLI bundle."""
     return PipelineCLIConfig(**pipeline).namespace(
-        mode="gnn", dataset=dataset, backend="padded", strategy=strategy,
+        mode="gnn", dataset=dataset, strategy=strategy,
         epochs=epochs, seed=0, log_every=0,
     )
 

@@ -59,7 +59,11 @@ def main() -> None:
     if want("kernels"):
         from benchmarks import kernels_bench
 
-        kernels_bench.run()
+        json_path = None
+        if args.json_out:
+            os.makedirs(args.json_out, exist_ok=True)
+            json_path = os.path.join(args.json_out, "BENCH_kernels.json")
+        kernels_bench.run(json_path=json_path)
     if want("roofline"):
         from benchmarks import roofline_table
 

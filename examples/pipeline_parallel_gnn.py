@@ -46,7 +46,7 @@ def main():
         # namespace — the same surface the CLI drivers and benchmarks use
         pipeline.setdefault("pipe_devices", 2)
         return PipelineCLIConfig(**pipeline).namespace(
-            mode="gnn", dataset=args.dataset, backend="padded",
+            mode="gnn", dataset=args.dataset,
             strategy=strategy, epochs=args.epochs, seed=0, log_every=0,
         )
 

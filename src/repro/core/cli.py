@@ -30,6 +30,7 @@ from repro.core.schedule import Placement
 ENGINE_CHOICES = ("host", "compiled")
 SCHEDULE_CHOICES = ("fill_drain", "gpipe", "1f1b", "interleaved", "zb-h1")
 PARTITION_CHOICES = ("uniform", "profiled")
+BACKEND_CHOICES = ("padded", "dense", "pallas")
 
 # layer-count split of the 6-layer sequential paper model
 UNIFORM_BALANCES = {2: (3, 3), 3: (2, 2, 2), 4: (2, 1, 1, 2), 6: (1,) * 6}
@@ -42,6 +43,7 @@ def add_pipeline_args(
     schedule: str = "fill_drain",
     chunks: int = 1,
     stages: int = 1,
+    backend: str = "padded",
 ):
     """Declare the pipeline flag set on ``ap`` (an ``argparse`` parser or
     group). Keyword defaults let each driver keep its own entry point
@@ -62,6 +64,11 @@ def add_pipeline_args(
     ap.add_argument("--placement", default=None,
                     help="stage->device ring placement as comma ints, e.g. "
                          "'1,2,3,0' (validated against the lowering's ring check)")
+    ap.add_argument("--backend", default=backend, choices=list(BACKEND_CHOICES),
+                    help="aggregation backend for the GNN layers: padded "
+                         "neighbor gathers (default), dense masked adjacency, "
+                         "or the Pallas kernels over the degree-bucketed "
+                         "layout")
     return ap
 
 
@@ -77,6 +84,7 @@ class PipelineCLIConfig:
     partition: str = "uniform"
     placement: str | None = None
     pipe_devices: int | None = None
+    backend: str = "padded"
 
     @classmethod
     def from_args(cls, args) -> "PipelineCLIConfig":
@@ -119,6 +127,7 @@ class PipelineCLIConfig:
             num_devices=self.resolved_pipe_devices,
             placement=self.parsed_placement(),
             engine=self.engine,
+            backend=self.backend,
         )
 
     def namespace(self, **extra) -> types.SimpleNamespace:

@@ -57,6 +57,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
 from repro.core.microbatch import MicroBatchPlan
+from repro.graphs.data import BucketedGraphBatch
+from repro.graphs.partition import bucketize_stacked
 from repro.core.schedule import (
     PHASE_BWD,
     PHASE_BWD_B,
@@ -98,6 +100,12 @@ class GPipeConfig:
     # ring check at engine construction
     placement: Placement | None = None
     engine: str = "host"  # "host" | "compiled"; consumed by make_engine
+    # aggregation backend: "padded" | "dense" | "pallas". Must match the
+    # backend the model's layers were built with; under "pallas" both
+    # engines additionally feed the stage programs the degree-bucketed
+    # layout (graphs.partition.bucketize_stacked) instead of the raw
+    # padded batch, so aggregation work tracks the degree distribution.
+    backend: str = "padded"
 
     @property
     def num_stages(self) -> int:
@@ -217,6 +225,9 @@ class PipelineEngine:
         for b in config.balance:
             self._bounds.append((lo, lo + b))
             lo += b
+        # graph -> backend layout, keyed by id(); entries retain the graph
+        # so a recycled id() can never serve a stale layout
+        self._layout_cache: dict = {}
 
     # ------------------------------------------------------------ stages --
 
@@ -257,6 +268,22 @@ class PipelineEngine:
         all the way into the serving frontend."""
         raise NotImplementedError
 
+    def layout(self, graph):
+        """The aggregation layout this engine's programs consume for a
+        chunk-stacked ``graph``: the padded batch itself for the padded and
+        dense backends, its degree-bucketed wrapper
+        (``graphs.partition.bucketize_stacked``) under ``backend="pallas"``.
+        The wrapper delegates every padded-batch attribute, so downstream
+        plumbing (loss masks, metric heads, shape keys) is layout-blind."""
+        if self.config.backend != "pallas" or isinstance(graph, BucketedGraphBatch):
+            return graph
+        cached = self._layout_cache.get(id(graph))
+        if cached is not None and cached[0] is graph:
+            return cached[1]
+        wrapped = bucketize_stacked(graph)
+        self._layout_cache[id(graph)] = (graph, wrapped)
+        return wrapped
+
     def evaluate(self, params: list, plan: MicroBatchPlan) -> dict:
         """Forward-only inference over the plan's chunks: the same metric
         dict as ``repro.train.loop.make_eval``, produced by this engine's
@@ -265,8 +292,9 @@ class PipelineEngine:
         numbers, with the paper's sequential split they reflect its dropped
         edges."""
         stacked = plan.stacked()
-        prog = self.compile_eval(params, stacked.graph)
-        return prog.metrics(stacked.graph, stacked.core_mask)
+        graph = self.layout(stacked.graph)
+        prog = self.compile_eval(params, graph)
+        return prog.metrics(graph, stacked.core_mask)
 
     def describe(self) -> dict:
         d = self.schedule.describe(self.config.num_stages, self.config.chunks)
@@ -406,18 +434,37 @@ class GPipe(PipelineEngine):
         chunk_key = jax.random.fold_in(rng, chunk)
         return jax.random.split(chunk_key, n_layers)
 
-    def _run_fwd_item(self, params, plan, rng, it, saved, outs, record):
+    def _chunk_graphs(self, plan: MicroBatchPlan) -> list:
+        """Per-chunk graphs the stage fns consume: the plan's padded batches
+        as-is, or (pallas) their degree-bucketed layouts. All chunks share
+        one set of bucket capacities (``bucketize_stacked`` on the stacked
+        plan, sliced back per chunk), so each per-stage jitted fn compiles
+        once and serves every chunk."""
+        if self.config.backend != "pallas":
+            return [mb.graph for mb in plan.batches]
+        cached = self._layout_cache.get(id(plan))
+        if cached is not None and cached[0] is plan:
+            return cached[1]
+        stacked = self.layout(plan.stacked().graph)
+        graphs = [
+            jax.tree_util.tree_map(lambda a, c=c: a[c], stacked)
+            for c in range(plan.chunks)
+        ]
+        self._layout_cache[id(plan)] = (plan, graphs)
+        return graphs
+
+    def _run_fwd_item(self, params, plan, graphs, rng, it, saved, outs, record):
         """Execute one forward work item: consume the saved stage input,
         produce (and route) the stage output."""
         s, c = it.stage, it.chunk
-        mb = plan.batches[c]
-        h = mb.graph.features if s == 0 else saved[(s, c)]
+        g = graphs[c]
+        h = g.features if s == 0 else saved[(s, c)]
         t0 = time.perf_counter()
         rngs = self._layer_rngs(rng, c)
         lo, _ = self._bounds[s]
         h_out = self._fwd_fns[s](
             self.stage_params(params, s),
-            mb.graph,
+            g,
             self._place(h, s),
             rngs[lo : lo + self.config.balance[s]],
         )
@@ -425,7 +472,7 @@ class GPipe(PipelineEngine):
             jax.block_until_ready(h_out)
             record.append(("fwd", it.tick, s, c, time.perf_counter() - t0))
         if s == 0:
-            saved[(0, c)] = mb.graph.features
+            saved[(0, c)] = g.features
         if s + 1 < self.config.num_stages:
             saved[(s + 1, c)] = h_out
         else:
@@ -455,6 +502,7 @@ class GPipe(PipelineEngine):
             # re-device the items (ticks/order untouched): recorded items and
             # _place() then reflect the configured stage->device assignment
             timeline = self.placement.apply(timeline)
+        graphs = self._chunk_graphs(plan)
 
         saved: dict[tuple[int, int], Any] = {}
         outs: dict[int, Any] = {}
@@ -467,11 +515,12 @@ class GPipe(PipelineEngine):
 
         for it in timeline:
             if it.phase == "fwd":
-                self._run_fwd_item(params, plan, rng, it, saved, outs, record)
+                self._run_fwd_item(params, plan, graphs, rng, it, saved, outs, record)
                 peak_live = max(peak_live, len(saved))
                 continue
             s, c = it.stage, it.chunk
             mb = plan.batches[c]
+            g = graphs[c]
             if s == S - 1 and it.phase in ("bwd", "bwd_b"):
                 # the chunk's loss cotangent, computed once its fwd completes
                 (loss_sum, count), d_h = self._loss_grad(
@@ -489,7 +538,7 @@ class GPipe(PipelineEngine):
             if it.phase == "bwd":
                 d_params, d_h = self._bwd_fns[s](
                     self.stage_params(params, s),
-                    mb.graph,
+                    g,
                     self._place(saved.pop((s, c)), s),
                     rngs[lo:hi],
                     self._place(cts[c], s),
@@ -503,7 +552,7 @@ class GPipe(PipelineEngine):
                 h_in = self._place(saved.pop((s, c)), s)
                 ct = self._place(cts[c], s)
                 d_h = self._bwd_b_fns[s](
-                    self.stage_params(params, s), mb.graph, h_in, rngs[lo:hi], ct
+                    self.stage_params(params, s), g, h_in, rngs[lo:hi], ct
                 )
                 residuals[(s, c)] = (h_in, ct)
                 peak_residuals = max(peak_residuals, len(residuals))
@@ -512,7 +561,7 @@ class GPipe(PipelineEngine):
             else:  # "bwd_w": consume the residual, produce the weight grad
                 h_in, ct = residuals.pop((s, c))
                 chunk_grads[s][c] = self._bwd_w_fns[s](
-                    self.stage_params(params, s), mb.graph, h_in, rngs[lo:hi], ct
+                    self.stage_params(params, s), g, h_in, rngs[lo:hi], ct
                 )
                 produced = chunk_grads[s][c]  # W emits no cotangent
             if record is not None:
@@ -1026,6 +1075,7 @@ class CompiledGNNPipeline(PipelineEngine):
         stats: dict | None = None,
     ):
         stacked = plan.stacked()
+        graph = self.layout(stacked.graph)
         if self._widths is None:
             chunk0 = jax.tree_util.tree_map(lambda a: a[0], stacked.graph)
             self._widths = activation_widths(self.model, params, chunk0)
@@ -1061,11 +1111,11 @@ class CompiledGNNPipeline(PipelineEngine):
                 stats["w_slots_per_device"] = lowered.n_wslots
         if self._fill_drain:
             return step(
-                params, opt_state, travel, stacked.graph, stacked.graph.labels,
+                params, opt_state, travel, graph, stacked.graph.labels,
                 loss_mask, rng,
             )
         return step(
-            params, opt_state, stacked.graph, stacked.graph.labels, loss_mask, rng
+            params, opt_state, graph, stacked.graph.labels, loss_mask, rng
         )
 
 

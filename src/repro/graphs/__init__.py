@@ -1,11 +1,29 @@
-from repro.graphs.data import GraphBatch, build_graph_batch, subgraph, validate_graph
-from repro.graphs.datasets import load_dataset, DATASETS
+from repro.graphs.data import (
+    BucketedGraphBatch,
+    DegreeBucket,
+    GraphBatch,
+    build_graph_batch,
+    subgraph,
+    validate_graph,
+)
+from repro.graphs.datasets import DATASETS, SKEWED_DATASETS, load_dataset
+from repro.graphs.partition import (
+    bucketize_stacked,
+    degree_bucket_widths,
+    degree_bucketed_layout,
+)
 
 __all__ = [
     "GraphBatch",
+    "BucketedGraphBatch",
+    "DegreeBucket",
     "build_graph_batch",
     "subgraph",
     "validate_graph",
     "load_dataset",
     "DATASETS",
+    "SKEWED_DATASETS",
+    "degree_bucket_widths",
+    "degree_bucketed_layout",
+    "bucketize_stacked",
 ]

@@ -73,6 +73,63 @@ class GraphBatch:
         return jnp.sum(self.mask) - self.num_nodes
 
 
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["neighbors", "norm", "mask", "row_node"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class DegreeBucket:
+    """One degree bucket: a dense ``(rows_b, width_b)`` neighbor tile.
+
+    Rows whose (compacted) slot count fits ``width_b`` but not the previous
+    bucket's width live here, padded up to the bucket's row capacity with
+    inert rows (mask all-False, norm 0 — they aggregate to zero and are
+    never gathered). ``neighbors`` indexes the ORIGINAL node numbering, so
+    the feature matrix needs no reordering.
+    """
+
+    neighbors: jax.Array  # (rows_b, width_b) int32, original node indices
+    norm: jax.Array  # (rows_b, width_b) float — 0 on padding slots/rows
+    mask: jax.Array  # (rows_b, width_b) bool
+    row_node: jax.Array  # (rows_b,) int32 — original row each tile row holds
+
+    @property
+    def width(self) -> int:
+        return self.neighbors.shape[-1]
+
+    @property
+    def rows(self) -> int:
+        return self.neighbors.shape[-2]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["base", "buckets", "gather_rows"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class BucketedGraphBatch:
+    """A GraphBatch plus its degree-bucketed aggregation layout.
+
+    Wraps (not replaces) the padded batch: attribute access falls through to
+    ``base``, so every consumer of the padded layout — loss masks, pipeline
+    plumbing, dense/padded backends — works unchanged, while the pallas
+    layers pick up ``buckets``/``gather_rows`` when present. Aggregation
+    reads per-bucket tiles and writes rows back through ``gather_rows``
+    (node i's output lives at concat-row ``gather_rows[i]``); inert bucket
+    padding rows are never referenced.
+    """
+
+    base: GraphBatch
+    buckets: tuple[DegreeBucket, ...]
+    gather_rows: jax.Array  # (n,) int32 into the bucket-concat row space
+
+    def __getattr__(self, name):
+        # only reached when normal lookup fails -> delegate to the base batch
+        return getattr(object.__getattribute__(self, "base"), name)
+
+
 def _edges_to_adj_lists(num_nodes: int, edges: np.ndarray) -> list[list[int]]:
     """Undirected edge list (m, 2) -> per-node sorted neighbor lists."""
     adj: list[set[int]] = [set() for _ in range(num_nodes)]

@@ -29,6 +29,49 @@ DATASETS: dict[str, tuple[int, int, int, int]] = {
     "karate": (34, 78, 34, 2),
 }
 
+# Power-law (Zipf) degree graphs: max_deg ≫ median_deg, so the padded
+# (n, max_deg) layout's cost is dominated by a handful of hub rows. These
+# are the fixtures for the degree-bucketed sparse path (fig3 sparse rows,
+# the CI sparse gate, and the engine backend-equivalence tests).
+# name: (num_nodes, num_features, num_classes, zipf_a, deg_cap)
+SKEWED_DATASETS: dict[str, tuple[int, int, int, float, int]] = {
+    "skewed-powerlaw": (8192, 64, 16, 1.7, 1024),
+    # test-sized twin: same shape of degree distribution, tractable in tier-1
+    "skewed-mini": (256, 16, 4, 1.7, 96),
+}
+
+
+def _powerlaw_edges(
+    rng: np.random.Generator,
+    labels: np.ndarray,
+    *,
+    zipf_a: float,
+    deg_cap: int,
+    p_intra: float,
+) -> np.ndarray:
+    """Undirected edges with Zipf-distributed target degrees.
+
+    Each node draws a target degree from Zipf(a) (capped), then connects to
+    that many partners — within-class with probability ``p_intra`` so the
+    classification task stays aggregation-dependent, like the planted
+    citation graphs. The realized degree distribution keeps the heavy tail:
+    a few hub nodes collect both their own draws and everyone else's.
+    """
+    n = labels.shape[0]
+    by_class = [np.flatnonzero(labels == c) for c in range(labels.max() + 1)]
+    target = np.minimum(rng.zipf(zipf_a, size=n), min(deg_cap, n - 1))
+    edges: set[tuple[int, int]] = set()
+    for i in range(n):
+        want = int(target[i])
+        intra = rng.random(want) < p_intra
+        members = by_class[labels[i]]
+        for k in range(want):
+            j = int(members[rng.integers(0, len(members))]) if intra[k] else int(rng.integers(0, n))
+            if i == j:
+                continue
+            edges.add((min(i, j), max(i, j)))
+    return np.array(sorted(edges), dtype=np.int64)
+
 
 def _planted_edges(rng: np.random.Generator, labels: np.ndarray, m: int, p_intra: float) -> np.ndarray:
     """Sample ~m unique undirected edges, p_intra of them within-class."""
@@ -121,15 +164,22 @@ def load_dataset(
     p_intra: float = 0.9,
 ) -> GraphBatch:
     """Generate the stat-matched synthetic dataset ``name`` deterministically."""
-    if name not in DATASETS:
-        raise KeyError(f"unknown dataset {name!r}; have {sorted(DATASETS)}")
-    n, m, d, c = DATASETS[name]
+    if name not in DATASETS and name not in SKEWED_DATASETS:
+        raise KeyError(
+            f"unknown dataset {name!r}; have {sorted(DATASETS) + sorted(SKEWED_DATASETS)}"
+        )
     # crc32, not hash(): str hashing is salted per process (PYTHONHASHSEED),
     # which silently made "deterministic" datasets differ between runs
     name_key = zlib.crc32(name.encode()) & 0xFFFF
     rng = np.random.default_rng(np.random.SeedSequence([name_key, seed]))
-    labels = rng.integers(0, c, size=n).astype(np.int64)
-    edges = _planted_edges(rng, labels, m, p_intra)
+    if name in SKEWED_DATASETS:
+        n, d, c, zipf_a, deg_cap = SKEWED_DATASETS[name]
+        labels = rng.integers(0, c, size=n).astype(np.int64)
+        edges = _powerlaw_edges(rng, labels, zipf_a=zipf_a, deg_cap=deg_cap, p_intra=p_intra)
+    else:
+        n, m, d, c = DATASETS[name]
+        labels = rng.integers(0, c, size=n).astype(np.int64)
+        edges = _planted_edges(rng, labels, m, p_intra)
     feats = _tfidf_features(rng, labels, d)
     train, val, test = _standard_split(rng, labels)
     return build_graph_batch(

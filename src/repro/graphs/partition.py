@@ -1,17 +1,27 @@
-"""Node partitioners + halo expansion for graph micro-batching.
+"""Node partitioners + halo expansion for graph micro-batching, plus the
+degree-bucketed aggregation layout.
 
 ``sequential`` is the paper's §6/§7.3 behaviour: GPipe splits the node-index
 tensor *by position*, so chunk boundaries cut edges arbitrarily. ``greedy``
 is a lightweight edge-cut-aware partitioner (METIS stand-in). ``halo``
 expands a chunk with its k-hop neighborhood so message passing stays exact —
 the "intelligent graph batching" the paper calls for in §8.
+
+``degree_bucketed_layout`` re-tiles the padded ``(n, max_deg)`` neighbor
+matrix into geometric degree buckets (widths 8/16/32/…/max_deg): each row
+moves to the narrowest bucket its live slot count fits, so aggregation work
+scales with the degree *distribution* instead of the single worst-case
+degree — on power-law graphs the padded layout spends almost all its slots
+on padding for a handful of hubs.
 """
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.data import GraphBatch
+from repro.graphs.data import BucketedGraphBatch, DegreeBucket, GraphBatch
 
 
 def sequential_partition(num_nodes: int, chunks: int) -> list[np.ndarray]:
@@ -132,6 +142,148 @@ def ego_subgraph(
     # so the seeds' local rows come from a binary search
     rows = np.searchsorted(nodes, seeds)
     return sub, rows
+
+
+def degree_bucket_widths(max_deg: int, *, base: int = 8) -> tuple[int, ...]:
+    """Geometric bucket-width ladder ``(base, 2·base, …, max_deg)``.
+
+    ``max_deg`` is the padded layout's slot width (self-loop included) and is
+    always the last rung, so every row fits somewhere.
+    """
+    if max_deg <= 0:
+        raise ValueError(f"max_deg must be positive, got {max_deg}")
+    widths: list[int] = []
+    w = base
+    while w < max_deg:
+        widths.append(w)
+        w *= 2
+    widths.append(max_deg)
+    return tuple(widths)
+
+
+def degree_bucketed_layout(
+    g: GraphBatch,
+    widths: tuple[int, ...] | None = None,
+    *,
+    row_capacities: tuple[int, ...] | None = None,
+    block: int = 8,
+) -> BucketedGraphBatch:
+    """Permute rows into degree buckets; carry the permutation + inverse.
+
+    Each row's live slots are first compacted leftward (``subgraph()`` can
+    leave holes in ``mask``), then the row is assigned to the narrowest
+    bucket whose width covers its slot count (slot-less padding rows land in
+    bucket 0 as inert all-masked rows). Each bucket is padded to a row
+    capacity — a multiple of ``block`` by default, or the caller's
+    ``row_capacities`` when several chunks must share one set of bucket
+    shapes (one jitted program for all chunks). The permutation lives in
+    ``row_node`` (bucket row -> original row) and its inverse in
+    ``gather_rows`` (original row -> bucket-concat row).
+
+    Host-side (numpy) by design, like ``subgraph``: layout construction is a
+    per-plan preprocessing step, never part of the jitted hot path.
+    """
+    nbr = np.asarray(g.neighbors)
+    msk = np.asarray(g.mask)
+    nrm = np.asarray(g.norm)
+    n, max_deg = nbr.shape
+    if widths is None:
+        widths = degree_bucket_widths(max_deg)
+    if widths[-1] < max_deg:
+        raise ValueError(f"last bucket width {widths[-1]} < layout width {max_deg}")
+    if row_capacities is not None and len(row_capacities) != len(widths):
+        raise ValueError("row_capacities must match widths")
+
+    # compact live slots leftward: stable argsort of ~mask keeps live-slot
+    # order (slot 0's self-loop stays first) while closing subgraph() holes.
+    # Within-row slot order only affects float summation order, which the
+    # oracle-tolerance equivalence tests already absorb.
+    order = np.argsort(~msk, axis=1, kind="stable")
+    nbr = np.take_along_axis(nbr, order, axis=1)
+    nrm = np.take_along_axis(nrm, order, axis=1)
+    msk = np.take_along_axis(msk, order, axis=1)
+    slots = msk.sum(axis=1)  # live slots per row (self-loop included)
+
+    # narrowest bucket whose width >= slots; slot-less rows -> bucket 0
+    bucket_of = np.searchsorted(np.asarray(widths), slots)
+
+    buckets: list[DegreeBucket] = []
+    gather = np.zeros(n, dtype=np.int32)
+    offset = 0
+    for b, wb in enumerate(widths):
+        rows = np.flatnonzero(bucket_of == b)
+        if row_capacities is not None:
+            cap = int(row_capacities[b])
+        else:
+            cap = -(-len(rows) // block) * block if len(rows) else 0
+        if cap < len(rows):
+            raise ValueError(f"bucket {b}: capacity {cap} < {len(rows)} rows")
+        b_nbr = np.zeros((cap, wb), dtype=np.int32)
+        b_nrm = np.zeros((cap, wb), dtype=nrm.dtype)
+        b_msk = np.zeros((cap, wb), dtype=bool)
+        b_row = np.zeros(cap, dtype=np.int32)
+        b_nbr[: len(rows)] = nbr[rows, :wb]
+        b_nrm[: len(rows)] = nrm[rows, :wb]
+        b_msk[: len(rows)] = msk[rows, :wb]
+        b_row[: len(rows)] = rows
+        gather[rows] = offset + np.arange(len(rows), dtype=np.int32)
+        buckets.append(
+            DegreeBucket(
+                neighbors=jnp.asarray(b_nbr),
+                norm=jnp.asarray(b_nrm, dtype=g.norm.dtype),
+                mask=jnp.asarray(b_msk),
+                row_node=jnp.asarray(b_row),
+            )
+        )
+        offset += cap
+    return BucketedGraphBatch(
+        base=g, buckets=tuple(buckets), gather_rows=jnp.asarray(gather)
+    )
+
+
+def bucketize_stacked(
+    g: GraphBatch, *, widths: tuple[int, ...] | None = None, block: int = 8
+) -> BucketedGraphBatch:
+    """Bucketize a chunk-stacked graph (leading ``chunks`` axis on every leaf).
+
+    All chunks share one set of bucket row capacities (the per-bucket max
+    over chunks, rounded up to ``block``), so the per-chunk layouts stack
+    into uniform-shape arrays and one jitted stage program serves every
+    chunk — the same uniformity contract ``MicroBatchPlan.stacked()`` keeps
+    for the padded layout.
+    """
+    msk = np.asarray(g.mask)  # (chunks, n_pad, max_deg)
+    chunks, _, max_deg = msk.shape
+    if widths is None:
+        widths = degree_bucket_widths(max_deg)
+    slots = msk.sum(axis=2)  # (chunks, n_pad)
+    bucket_of = np.searchsorted(np.asarray(widths), slots)
+    caps = []
+    for b in range(len(widths)):
+        most = int((bucket_of == b).sum(axis=1).max())
+        caps.append(-(-most // block) * block if most else 0)
+    caps = tuple(caps)
+
+    per_chunk = [
+        degree_bucketed_layout(
+            jax.tree_util.tree_map(lambda a, c=c: a[c], g),
+            widths,
+            row_capacities=caps,
+            block=block,
+        )
+        for c in range(chunks)
+    ]
+    stacked_buckets = tuple(
+        DegreeBucket(
+            neighbors=jnp.stack([pc.buckets[b].neighbors for pc in per_chunk]),
+            norm=jnp.stack([pc.buckets[b].norm for pc in per_chunk]),
+            mask=jnp.stack([pc.buckets[b].mask for pc in per_chunk]),
+            row_node=jnp.stack([pc.buckets[b].row_node for pc in per_chunk]),
+        )
+        for b in range(len(widths))
+    )
+    gather = jnp.stack([pc.gather_rows for pc in per_chunk])
+    return BucketedGraphBatch(base=g, buckets=stacked_buckets, gather_rows=gather)
 
 
 def edge_cut_fraction(g: GraphBatch, parts: list[np.ndarray]) -> float:

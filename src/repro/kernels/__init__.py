@@ -1,3 +1,47 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Runtime policy shared by every Pallas kernel in this package.
+
+Two decisions used to be hardcoded per call site and are now resolved once,
+here:
+
+* ``runtime_interpret()`` — whether ``pallas_call`` runs in interpret mode.
+  Previously every ``kernels/*/kernel.py`` defaulted ``interpret=True``
+  ("CPU container"), so a TPU run silently interpreted unless every call
+  site passed ``interpret=False``. Now the default is ``None`` and resolves
+  at trace time: compiled on TPU, interpret elsewhere, with
+  ``REPRO_PALLAS_INTERPRET=0|1`` as an explicit override.
+
+* ``use_kernel_forward()`` — whether the public ops (``padded_spmm``,
+  ``gat_aggregate`` and their bucketed variants) run the Pallas kernel or
+  the jnp oracle on the forward pass. Interpret-mode Pallas on CPU is a
+  per-element emulator — orders of magnitude slower than the XLA oracle —
+  so routing every CPU run through it would make any CPU timing of the
+  ``pallas`` backend measure the emulator, not the layout. Default: kernel
+  on TPU, oracle elsewhere; ``REPRO_PALLAS_FORCE_KERNEL=1`` forces the
+  kernel (CI uses this to drive the real kernels through the pipeline in
+  interpret mode). Backward is always the oracle vjp (kernel-forward /
+  oracle-backward pairing), so gradients are identical either way.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+_TRUTHY = ("1", "true", "True", "yes")
+
+
+def runtime_interpret() -> bool:
+    """Should ``pallas_call`` interpret? Env override, else backend autodetect."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env in _TRUTHY
+    return jax.default_backend() != "tpu"
+
+
+def use_kernel_forward() -> bool:
+    """Should the public ops run the Pallas kernel (vs the jnp oracle)?"""
+    env = os.environ.get("REPRO_PALLAS_FORCE_KERNEL")
+    if env is not None:
+        return env in _TRUTHY
+    return jax.default_backend() == "tpu"

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import runtime_interpret
+
 _NEG = -2.0e38
 
 
@@ -79,8 +81,12 @@ def flash_attention_kernel(
     block_kv: int = 128,
     window: int = 0,
     softcap: float = 0.0,
-    interpret: bool = True,  # CPU container: interpret; TPU target: False
+    interpret: bool | None = None,  # None -> kernels.runtime_interpret()
 ) -> jax.Array:
+    if interpret is None:
+        # resolved at trace time; jit caches under the None key, which is
+        # stable because the backend cannot change within a process
+        interpret = runtime_interpret()
     bh, sq, hd = q.shape
     bkv_rows, skv, hd_v = v.shape
     h = num_q_heads

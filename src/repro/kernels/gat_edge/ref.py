@@ -1,10 +1,16 @@
-"""Pure-jnp oracle for the fused GAT neighbor-attention kernel.
+"""Pure-jnp oracles for the fused GAT neighbor-attention kernels.
 
 Math (paper eq. 3–4, per head, over the padded-neighbor layout):
 
     e[i,j]     = LeakyReLU(s_self[i] + s_nbr[i,j])
     alpha[i,:] = masked softmax_j(e[i,:])
     out[i]     = Σ_j alpha[i,j] · nbr_hw[i,j,:]
+
+``bucket_gat_ref`` is the same math over one degree bucket's rectangular
+tile: rows are bucket rows (R of them, width W), neighbor indices point into
+the full (N, F) feature matrix, and the gather the kernel performs in VMEM
+is materialized here explicitly — it is the oracle, and ``(H, R, W, F)`` is
+bounded by the bucket's width rather than the global max degree.
 """
 
 from __future__ import annotations
@@ -13,6 +19,14 @@ import jax
 import jax.numpy as jnp
 
 _NEG = -1e9
+
+
+def _masked_alpha(scores: jax.Array, mask: jax.Array, dtype) -> jax.Array:
+    scores = jnp.where(mask, scores.astype(jnp.float32), _NEG)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m) * mask
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return (p / l).astype(dtype)
 
 
 def gat_aggregate_ref(
@@ -24,9 +38,19 @@ def gat_aggregate_ref(
     negative_slope: float = 0.2,
 ) -> jax.Array:  # (H, N, F)
     scores = jax.nn.leaky_relu(s_self[..., None] + s_nbr, negative_slope)
-    scores = jnp.where(mask[None], scores.astype(jnp.float32), _NEG)
-    m = jnp.max(scores, axis=-1, keepdims=True)
-    p = jnp.exp(scores - m) * mask[None]
-    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
-    alpha = (p / l).astype(nbr_hw.dtype)
+    alpha = _masked_alpha(scores, mask[None], nbr_hw.dtype)
     return jnp.einsum("hnd,hndf->hnf", alpha, nbr_hw)
+
+
+def bucket_gat_ref(
+    hw_heads: jax.Array,  # (H, N, F) — full feature matrix
+    neighbors: jax.Array,  # (R, W) int32 — one bucket's rows
+    s_self: jax.Array,  # (H, R)
+    s_nbr: jax.Array,  # (H, R, W)
+    mask: jax.Array,  # (R, W) bool
+    *,
+    negative_slope: float = 0.2,
+) -> jax.Array:  # (H, R, F)
+    scores = jax.nn.leaky_relu(s_self[..., None] + s_nbr, negative_slope)
+    alpha = _masked_alpha(scores, mask[None], hw_heads.dtype)
+    return jnp.einsum("hrw,hrwf->hrf", alpha, hw_heads[:, neighbors])

@@ -6,6 +6,15 @@ floats ≈ 5 MB, well under the ~128 MB v5e VMEM), the padded neighbor-index
 matrix rides in scalar-prefetch (SMEM) so row indices can drive dynamic VMEM
 row loads — the Pallas TPU idiom for data-dependent access. Grid over node
 tiles; each tile accumulates its D weighted neighbor rows.
+
+Two entry points share the inner kernel:
+
+* ``padded_spmm_kernel`` — square layout, one row of ``neighbors`` per row
+  of ``hw`` (the original padded path).
+* ``bucket_spmm_kernel`` — a degree bucket's rectangular tile: ``neighbors``
+  has R rows of width W indexing into an (N, F) feature matrix with R ≠ N.
+  One launch per bucket; the per-bucket width is what makes aggregation
+  cost follow the degree distribution instead of the global max degree.
 """
 
 from __future__ import annotations
@@ -16,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import runtime_interpret
 
 
 def _kernel(nbr_ref, norm_ref, hw_ref, out_ref, *, block_n: int, max_deg: int):
@@ -39,34 +50,60 @@ def _kernel(nbr_ref, norm_ref, hw_ref, out_ref, *, block_n: int, max_deg: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _spmm_call(
+    hw: jax.Array,  # (N, F)
+    neighbors: jax.Array,  # (R, W) int32, rows indexing into hw
+    norm: jax.Array,  # (R, W)
+    *,
+    block_n: int,
+    interpret: bool,
+) -> jax.Array:
+    n, f = hw.shape
+    r, w = neighbors.shape
+    pad = (-r) % block_n
+    nbr_p = jnp.pad(neighbors, ((0, pad), (0, 0)))
+    norm_p = jnp.pad(norm, ((0, pad), (0, 0)))
+    r_pad = r + pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, w), lambda i, nbr: (i, 0)),
+            pl.BlockSpec((n, f), lambda i, nbr: (0, 0)),  # resident
+        ],
+        out_specs=pl.BlockSpec((block_n, f), lambda i, nbr: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_n=block_n, max_deg=w),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r_pad, f), hw.dtype),
+        interpret=interpret,
+    )(nbr_p, norm_p, hw)
+    return out[:r]
+
+
 def padded_spmm_kernel(
     hw: jax.Array,  # (N, F)
     neighbors: jax.Array,  # (N, D) int32
     norm: jax.Array,  # (N, D)
     *,
     block_n: int = 256,
-    interpret: bool = True,  # CPU container: interpret; TPU target: False
+    interpret: bool | None = None,  # None -> kernels.runtime_interpret()
 ) -> jax.Array:
-    n, f = hw.shape
-    d = neighbors.shape[1]
-    pad = (-n) % block_n
-    nbr_p = jnp.pad(neighbors, ((0, pad), (0, 0)))
-    norm_p = jnp.pad(norm, ((0, pad), (0, 0)))
-    n_pad = n + pad
+    if interpret is None:
+        interpret = runtime_interpret()
+    return _spmm_call(hw, neighbors, norm, block_n=block_n, interpret=interpret)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(n_pad // block_n,),
-        in_specs=[
-            pl.BlockSpec((block_n, d), lambda i, nbr: (i, 0)),
-            pl.BlockSpec((n, f), lambda i, nbr: (0, 0)),  # resident
-        ],
-        out_specs=pl.BlockSpec((block_n, f), lambda i, nbr: (i, 0)),
-    )
-    out = pl.pallas_call(
-        functools.partial(_kernel, block_n=block_n, max_deg=d),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_pad, f), hw.dtype),
-        interpret=interpret,
-    )(nbr_p, norm_p, hw)
-    return out[:n]
+
+def bucket_spmm_kernel(
+    hw: jax.Array,  # (N, F) — full feature matrix, original node numbering
+    neighbors: jax.Array,  # (R, W) int32 — one degree bucket's rows
+    norm: jax.Array,  # (R, W)
+    *,
+    block_r: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:  # (R, F)
+    if interpret is None:
+        interpret = runtime_interpret()
+    return _spmm_call(hw, neighbors, norm, block_n=block_r, interpret=interpret)

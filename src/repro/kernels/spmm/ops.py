@@ -1,19 +1,31 @@
-"""Public op for the padded SpMM kernel (+ custom VJP via the oracle)."""
+"""Public ops for the SpMM kernels (+ custom VJP via the oracle).
+
+``padded_spmm`` aggregates over the square padded-neighbor layout;
+``bucketed_spmm`` over the degree-bucketed layout (tuples of per-bucket
+dense tiles, see ``graphs.partition.degree_bucketed_layout``). Forward
+routing follows ``kernels.use_kernel_forward()``: the Pallas kernel on TPU
+(or when ``REPRO_PALLAS_FORCE_KERNEL=1``), the jnp oracle elsewhere —
+interpret-mode Pallas on CPU is an emulator, not a measurement of the
+layout. Backward is always the oracle vjp (kernel-forward/oracle-backward
+pairing), so gradients are identical under either routing.
+"""
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.spmm.kernel import padded_spmm_kernel
-from repro.kernels.spmm.ref import padded_spmm_ref
+from repro.kernels import use_kernel_forward
+from repro.kernels.spmm.kernel import bucket_spmm_kernel, padded_spmm_kernel
+from repro.kernels.spmm.ref import bucketed_spmm_ref, padded_spmm_ref
 
 
 @jax.custom_vjp
 def padded_spmm(hw, neighbors, norm):
-    """out[i] = Σ_j norm[i,j] · hw[neighbors[i,j]] — Pallas forward."""
-    return padded_spmm_kernel(hw, neighbors, norm)
+    """out[i] = Σ_j norm[i,j] · hw[neighbors[i,j]]."""
+    if use_kernel_forward():
+        return padded_spmm_kernel(hw, neighbors, norm)
+    return padded_spmm_ref(hw, neighbors, norm)
 
 
 def _fwd(hw, neighbors, norm):
@@ -28,3 +40,37 @@ def _bwd(res, ct):
 
 
 padded_spmm.defvjp(_fwd, _bwd)
+
+
+@jax.custom_vjp
+def bucketed_spmm(hw, neighbors, norms, gather_rows):
+    """Degree-bucketed GCN aggregation back in original node order.
+
+    ``neighbors``/``norms`` are equal-length tuples of per-bucket
+    ``(R_b, W_b)`` tiles (indices into ``hw``'s rows); ``gather_rows`` maps
+    node i to its row in the bucket concatenation. One kernel launch per
+    non-empty bucket.
+    """
+    if use_kernel_forward():
+        outs = []
+        for nbr, nrm in zip(neighbors, norms):
+            if nbr.shape[0] == 0:
+                outs.append(jnp.zeros((0, hw.shape[1]), hw.dtype))
+            else:
+                outs.append(bucket_spmm_kernel(hw, nbr, nrm))
+        return jnp.concatenate(outs, axis=0)[gather_rows]
+    return bucketed_spmm_ref(hw, neighbors, norms, gather_rows)
+
+
+def _bucketed_fwd(hw, neighbors, norms, gather_rows):
+    return bucketed_spmm(hw, neighbors, norms, gather_rows), (hw, neighbors, norms, gather_rows)
+
+
+def _bucketed_bwd(res, ct):
+    hw, neighbors, norms, gather_rows = res
+    _, vjp = jax.vjp(lambda a, w: bucketed_spmm_ref(a, neighbors, w, gather_rows), hw, norms)
+    d_hw, d_norms = vjp(ct)
+    return d_hw, tuple(None for _ in neighbors), d_norms, None
+
+
+bucketed_spmm.defvjp(_bucketed_fwd, _bucketed_bwd)

@@ -1,6 +1,10 @@
 """Pure-jnp oracle for padded-neighbor SpMM (GCN aggregation):
 
     out[i] = Σ_j norm[i, j] · hw[neighbors[i, j]]
+
+and its degree-bucketed variant, where rows live in per-bucket dense tiles
+of geometric widths and ``gather_rows`` maps original node order into the
+bucket-concatenated row space.
 """
 
 from __future__ import annotations
@@ -12,3 +16,14 @@ import jax.numpy as jnp
 def padded_spmm_ref(hw: jax.Array, neighbors: jax.Array, norm: jax.Array) -> jax.Array:
     """hw: (N, F); neighbors: (N, D) int32; norm: (N, D) (0 on padding)."""
     return jnp.einsum("nd,ndf->nf", norm, hw[neighbors])
+
+
+def bucketed_spmm_ref(
+    hw: jax.Array,  # (N, F)
+    neighbors: tuple[jax.Array, ...],  # per bucket (R_b, W_b) int32
+    norms: tuple[jax.Array, ...],  # per bucket (R_b, W_b), 0 on padding
+    gather_rows: jax.Array,  # (N,) int32 into the bucket-concat row space
+) -> jax.Array:  # (N, F)
+    """Per-bucket weighted gather, concatenated and permuted back to node order."""
+    outs = [jnp.einsum("rw,rwf->rf", nrm, hw[nbr]) for nbr, nrm in zip(neighbors, norms)]
+    return jnp.concatenate(outs, axis=0)[gather_rows]

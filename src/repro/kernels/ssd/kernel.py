@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import runtime_interpret
+
 
 def _kernel(x_ref, dt_ref, loga_ref, b_ref, c_ref, y_ref, h_scratch, *, nc: int):
     ci = pl.program_id(1)
@@ -68,8 +70,12 @@ def ssd_kernel(
     C: jax.Array,  # (BH, S, N)
     *,
     chunk: int = 128,
-    interpret: bool = True,  # CPU container: interpret; TPU target: False
+    interpret: bool | None = None,  # None -> kernels.runtime_interpret()
 ) -> jax.Array:
+    if interpret is None:
+        # resolved at trace time; jit caches under the None key, which is
+        # stable because the backend cannot change within a process
+        interpret = runtime_interpret()
     bh, s, p = x.shape
     n = B.shape[-1]
     assert s % chunk == 0, (s, chunk)

@@ -317,7 +317,9 @@ def run(args) -> dict:
     from repro.models.gnn.net import build_paper_gat
 
     g = load_dataset(args.dataset, seed=args.seed)
-    model = build_paper_gat(g.num_features, g.num_classes)
+    # serving is forward-only (train=False), so the pallas backend's
+    # attn-dropout restriction never triggers and the paper rate can stay
+    model = build_paper_gat(g.num_features, g.num_classes, backend=args.backend)
     params = model.init_params(jax.random.PRNGKey(args.seed))
 
     cli = PipelineCLIConfig.from_args(args)

@@ -270,11 +270,12 @@ def main():
     ap.add_argument("--dataset", default="cora")
     ap.add_argument("--arch", default="mamba2-130m")
     ap.add_argument("--full-arch", action="store_true", help="use the full (not smoke) config")
-    ap.add_argument("--backend", default="padded", choices=["padded", "dense", "pallas"])
     ap.add_argument("--strategy", default="sequential")
     from repro.core.cli import add_pipeline_args
 
-    add_pipeline_args(ap)  # --engine/--schedule/--stages/--chunks/--pipe-devices/--partition/--placement
+    # --engine/--schedule/--stages/--chunks/--pipe-devices/--partition/
+    # --placement/--backend
+    add_pipeline_args(ap)
     ap.add_argument("--epochs", type=int, default=300)
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq", type=int, default=256)

@@ -20,9 +20,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.graphs.data import GraphBatch
+from repro.graphs.data import BucketedGraphBatch, GraphBatch
 
 _NEG_INF = -1e9
+
+
+def _bucket_fields(g: BucketedGraphBatch):
+    return (
+        tuple(b.neighbors for b in g.buckets),
+        tuple(b.norm for b in g.buckets),
+        tuple(b.mask for b in g.buckets),
+        tuple(b.row_node for b in g.buckets),
+    )
 
 
 def glorot(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
@@ -66,9 +75,15 @@ def gcn_layer(params: dict, g: GraphBatch, h: jax.Array, *, backend: str = "padd
     if backend == "dense":
         agg = _dense_norm(g) @ hw
     elif backend == "pallas":
-        from repro.kernels.spmm.ops import padded_spmm
+        if isinstance(g, BucketedGraphBatch):
+            from repro.kernels.spmm.ops import bucketed_spmm
 
-        agg = padded_spmm(hw, g.neighbors, g.norm)
+            nbrs, nrms, _, _ = _bucket_fields(g)
+            agg = bucketed_spmm(hw, nbrs, nrms, g.gather_rows)
+        else:
+            from repro.kernels.spmm.ops import padded_spmm
+
+            agg = padded_spmm(hw, g.neighbors, g.norm)
     else:
         gathered = hw[g.neighbors]  # (n, max_deg, out)
         agg = jnp.einsum("nd,ndo->no", g.norm, gathered)
@@ -117,11 +132,20 @@ def gat_layer(
     s_dst = jnp.einsum("nho,ho->nh", hw, params["a_dst"])  # importance of j as src
 
     if backend == "pallas":
-        from repro.kernels.gat_edge.ops import gat_aggregate
+        if isinstance(g, BucketedGraphBatch):
+            from repro.kernels.gat_edge.ops import bucketed_gat_aggregate
 
-        out = gat_aggregate(
-            hw, s_src, s_dst, g.neighbors, g.mask, negative_slope=negative_slope
-        )
+            nbrs, _, msks, rows = _bucket_fields(g)
+            out = bucketed_gat_aggregate(
+                hw, s_src, s_dst, nbrs, msks, rows, g.gather_rows,
+                negative_slope,
+            )
+        else:
+            from repro.kernels.gat_edge.ops import gat_aggregate
+
+            out = gat_aggregate(
+                hw, s_src, s_dst, g.neighbors, g.mask, negative_slope=negative_slope
+            )
     elif backend == "dense":
         adj = _dense_adj(g)  # (n, n)
         scores = s_src[:, None, :] + s_dst[None, :, :]  # (n, n, H)

@@ -15,7 +15,12 @@ import pytest
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from benchmarks.check_perf import check, check_serving, normalized_ratios  # noqa: E402
+from benchmarks.check_perf import (  # noqa: E402
+    check,
+    check_kernels,
+    check_serving,
+    normalized_ratios,
+)
 
 
 def _row(step_s, *, bubble=0.4, peak=8, peak_acc=16):
@@ -182,6 +187,113 @@ def test_partition_gate_coverage():
     assert any(
         f.startswith("partition:") and "no uniform row" in f for f in failures
     ), failures
+
+
+# ------------------------------------------------------------ sparse gate --
+
+
+def _sparse_rows(padded, bucketed, *, padded_match=True, bucketed_match=True):
+    rows = _base_rows()
+    rows["sparse/padded/chunks2"] = {
+        "step_s": padded, "max_update_diff": 5e-8, "updates_match": padded_match,
+    }
+    rows["sparse/bucketed/chunks2"] = {
+        "step_s": bucketed, "max_update_diff": 5e-8, "updates_match": bucketed_match,
+    }
+    return rows
+
+
+def test_sparse_gate_requires_strict_bucketed_win():
+    good = _table(**_sparse_rows(0.35, 0.05))
+    assert check(good, good, threshold=1.2, absolute=False) == []
+    tie = _table(**_sparse_rows(0.35, 0.35))
+    failures = check(good, tie, threshold=1.2, absolute=False)
+    assert any(f.startswith("sparse:") and "not strictly below" in f for f in failures)
+
+
+def test_sparse_gate_requires_updates_match_on_both_rows():
+    good = _table(**_sparse_rows(0.35, 0.05))
+    for kw in ({"padded_match": False}, {"bucketed_match": False}):
+        bad = _table(**_sparse_rows(0.35, 0.05, **kw))
+        failures = check(good, bad, threshold=1.2, absolute=False)
+        assert any(
+            f.startswith("sparse:") and "diverged" in f for f in failures
+        ), (kw, failures)
+
+
+def test_sparse_gate_coverage():
+    base = _table(**_sparse_rows(0.35, 0.05))
+    cur = dict(_sparse_rows(0.35, 0.05))
+    del cur["sparse/padded/chunks2"]
+    failures = check(base, _table(**cur), threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("coverage:") and "sparse/padded/chunks2" in f for f in failures
+    ), failures
+    assert any(
+        f.startswith("sparse:") and "no padded row" in f for f in failures
+    ), failures
+
+
+# ----------------------------------------------------------- kernels gate --
+
+
+def _kernel_row(t_us, *, match=True, diff=0.0):
+    return {"t_us": t_us, "layout_slots": 1000,
+            "max_abs_diff": diff, "outputs_match": match}
+
+
+def _kernel_table(padded=100.0, bucketed=10.0, **kw):
+    return {"rows": {
+        "kernels/spmm/padded": _kernel_row(padded),
+        "kernels/spmm/bucketed": _kernel_row(bucketed, **kw),
+    }}
+
+
+def test_kernels_gate_passes_on_identical_tables():
+    t = _kernel_table()
+    assert check_kernels(t, t, threshold=1.3) == []
+
+
+def test_kernels_gate_requires_strict_bucketed_win():
+    base = _kernel_table(padded=100.0, bucketed=10.0)
+    cur = _kernel_table(padded=100.0, bucketed=100.0)
+    failures = check_kernels(base, cur, threshold=1.3)
+    assert any("must win strictly" in f for f in failures), failures
+
+
+def test_kernels_gate_ratio_regression_is_machine_cancelling():
+    base = _kernel_table(padded=100.0, bucketed=10.0)  # 0.10x
+    slower_machine = _kernel_table(padded=300.0, bucketed=30.0)  # still 0.10x
+    assert check_kernels(base, slower_machine, threshold=1.3) == []
+    regressed = _kernel_table(padded=100.0, bucketed=20.0)  # 0.20x > 0.10 * 1.3
+    failures = check_kernels(base, regressed, threshold=1.3)
+    assert any("bucketed/padded ratio" in f for f in failures), failures
+
+
+def test_kernels_gate_output_divergence_fails():
+    base = _kernel_table()
+    bad = _kernel_table(match=False, diff=0.5)
+    failures = check_kernels(base, bad, threshold=1.3)
+    assert any("output diverged" in f for f in failures), failures
+
+
+def test_kernels_gate_coverage_fails_by_name():
+    base = _kernel_table()
+    cur = {"rows": {"kernels/spmm/padded": _kernel_row(100.0)}}
+    failures = check_kernels(base, cur, threshold=1.3)
+    assert any(
+        f.startswith("kernels-coverage:") and "kernels/spmm/bucketed" in f
+        for f in failures
+    ), failures
+    failures = check_kernels(base, {"rows": {}}, threshold=1.3)
+    assert any("no kernels/ rows" in f for f in failures), failures
+
+
+def test_kernels_gate_zero_padded_normalizer_fails():
+    base = _kernel_table()
+    cur = _kernel_table(padded=0.0)
+    failures = check_kernels(base, cur, threshold=1.3)
+    assert any("not positive" in f for f in failures), failures
 
 
 # ----------------------------------------------------------- serving gate --

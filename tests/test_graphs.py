@@ -97,3 +97,130 @@ def test_edge_cut_fraction_bounds():
     assert 0.0 < f < 1.0
     whole = [np.arange(g.num_nodes)]
     assert P.edge_cut_fraction(g, whole) == 0.0
+
+
+# ------------------------------------------------- degree-bucketed layout --
+
+
+def _live_pairs(nbr_row, nrm_row, msk_row):
+    """Sorted multiset of live (neighbor, norm) slots — layout-invariant."""
+    pairs = [(int(a), float(b)) for a, b, m in zip(nbr_row, nrm_row, msk_row) if m]
+    return sorted(pairs)
+
+
+def test_degree_bucket_widths_ladder():
+    assert P.degree_bucket_widths(100) == (8, 16, 32, 64, 100)
+    assert P.degree_bucket_widths(8) == (8,)
+    assert P.degree_bucket_widths(3) == (3,)  # narrower than base: one bucket
+    with pytest.raises(ValueError):
+        P.degree_bucket_widths(0)
+
+
+def test_bucketed_layout_round_trip():
+    """row_node (bucket row -> node) and gather_rows (node -> concat row)
+    are mutual inverses over the real rows; capacity-padding rows are inert
+    (all-masked, zero norm) and never in gather's image."""
+    g = load_dataset("skewed-mini")
+    b = P.degree_bucketed_layout(g)
+    row_node = np.concatenate([np.asarray(bk.row_node) for bk in b.buckets])
+    gather = np.asarray(b.gather_rows)
+    assert np.array_equal(row_node[gather], np.arange(g.num_nodes))
+    # inert rows: exactly the concat rows outside gather's image, mask-free
+    image = np.zeros(len(row_node), dtype=bool)
+    image[gather] = True
+    offset = 0
+    for bk in b.buckets:
+        inert = ~image[offset:offset + bk.rows]
+        assert not np.asarray(bk.mask)[inert].any()
+        assert (np.asarray(bk.norm)[inert] == 0).all()
+        offset += bk.rows
+
+
+def test_bucketed_layout_preserves_live_slots():
+    """Every node's live (neighbor, norm) multiset survives bucketing —
+    the layout moves slots, never edge data."""
+    g = load_dataset("skewed-mini")
+    b = P.degree_bucketed_layout(g)
+    gather = np.asarray(b.gather_rows)
+    offsets = np.cumsum([0] + [bk.rows for bk in b.buckets])
+    g_nbr, g_nrm, g_msk = (np.asarray(a) for a in (g.neighbors, g.norm, g.mask))
+    for i in range(g.num_nodes):
+        r = gather[i]
+        k = int(np.searchsorted(offsets, r, side="right")) - 1
+        bk = b.buckets[k]
+        lr = r - offsets[k]
+        got = _live_pairs(
+            np.asarray(bk.neighbors)[lr], np.asarray(bk.norm)[lr],
+            np.asarray(bk.mask)[lr],
+        )
+        want = _live_pairs(g_nbr[i], g_nrm[i], g_msk[i])
+        assert got == want, f"node {i} (bucket {k})"
+        # the row fits the narrowest covering bucket: width >= live slots
+        assert len(want) <= bk.width
+
+
+def test_bucketed_layout_compacts_subgraph_holes():
+    """subgraph() leaves interior mask holes; the layout closes them (live
+    slots left-packed) so narrow rows land in narrow buckets."""
+    rng = np.random.default_rng(3)
+    g = _random_graph(rng, n=60, m=200)
+    sub = subgraph(g, np.arange(0, 60, 2))  # drop odd nodes -> holes
+    msk = np.asarray(sub.mask)
+    holes = (~msk[:, :-1] & msk[:, 1:]).any()
+    assert holes, "fixture should have interior holes"
+    b = P.degree_bucketed_layout(sub)
+    for bk in b.buckets:
+        bmsk = np.asarray(bk.mask)
+        # left-packed: once a slot is dead, the rest of the row is dead
+        assert not (~bmsk[:, :-1] & bmsk[:, 1:]).any()
+    # and the live-slot multiset still survives per node
+    gather = np.asarray(b.gather_rows)
+    offsets = np.cumsum([0] + [bk.rows for bk in b.buckets])
+    s_nbr, s_nrm, s_msk = (np.asarray(a) for a in (sub.neighbors, sub.norm, sub.mask))
+    for i in range(sub.num_nodes):
+        r = gather[i]
+        k = int(np.searchsorted(offsets, r, side="right")) - 1
+        lr = r - offsets[k]
+        bk = b.buckets[k]
+        assert _live_pairs(
+            np.asarray(bk.neighbors)[lr], np.asarray(bk.norm)[lr],
+            np.asarray(bk.mask)[lr],
+        ) == _live_pairs(s_nbr[i], s_nrm[i], s_msk[i])
+
+
+def test_bucketed_layout_empty_and_single_bucket():
+    g = load_dataset("karate")
+    max_deg = g.neighbors.shape[1]
+    # a ladder rung no row uses -> zero-capacity bucket, shapes still valid
+    b = P.degree_bucketed_layout(g, widths=(1, max_deg))
+    assert b.buckets[0].rows == 0 or b.buckets[0].rows % 8 == 0
+    row_node = np.concatenate([np.asarray(bk.row_node) for bk in b.buckets])
+    assert np.array_equal(row_node[np.asarray(b.gather_rows)], np.arange(g.num_nodes))
+    # one bucket as wide as the layout: degenerates to (padded + permutation)
+    b1 = P.degree_bucketed_layout(g, widths=(max_deg,))
+    assert len(b1.buckets) == 1
+    assert b1.buckets[0].width == max_deg
+    # too-narrow ladder is rejected, not silently truncated
+    with pytest.raises(ValueError, match="last bucket width"):
+        P.degree_bucketed_layout(g, widths=(4,))
+
+
+def test_bucketize_stacked_uniform_caps():
+    """Chunk-stacked bucketing: one shared set of bucket shapes (leading
+    ``chunks`` axis), each chunk's slice a valid layout of that chunk."""
+    from repro.core.microbatch import make_plan
+
+    g = load_dataset("skewed-mini")
+    plan = make_plan(g, 2, strategy="sequential")
+    stacked = plan.stacked().graph
+    b = P.bucketize_stacked(stacked)
+    chunks, n_pad = stacked.features.shape[:2]
+    assert chunks == 2
+    for bk in b.buckets:
+        assert bk.neighbors.shape[0] == chunks
+        assert bk.neighbors.shape[1] % 8 == 0 or bk.neighbors.shape[1] == 0
+    assert b.gather_rows.shape == (chunks, n_pad)
+    for c in range(chunks):
+        row_node = np.concatenate([np.asarray(bk.row_node[c]) for bk in b.buckets])
+        gather = np.asarray(b.gather_rows[c])
+        assert np.array_equal(row_node[gather], np.arange(n_pad))
