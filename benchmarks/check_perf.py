@@ -33,6 +33,13 @@ regressed:
     fig3 asserts each measured config's one-step update against a host
     fill-drain padded reference at oracle tolerance, so a layout that got
     fast by computing something else fails here, not in prod;
+  * **scale** — the streamed-graph growth rows (``scale/nN/chunksC``, from
+    fig3's ``_scale_bench``): every row's one-step update must have matched
+    the host fill-drain oracle in the same run that was timed
+    (``updates_match``), and the run-internal growth ratio
+    step(n)/step(n_min) must stay within ``--threshold`` of the baseline's
+    ratio — the sizes are stepped interleaved, so machine speed cancels and
+    the ratio isolates how step time grows with the graph;
   * **zero-bubble** — at every chunk count >= 4 the compiled zb-h1 row must
     beat or match the same run's compiled 1F1B step time (within the same
     ``--threshold`` slack the speed gate uses), its bubble fraction must sit
@@ -122,7 +129,7 @@ def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) ->
     b_rows, c_rows = baseline["rows"], current["rows"]
 
     for key in sorted(b_rows):
-        if key.startswith(("compiled/", "partition/", "sparse/")) and key not in c_rows:
+        if key.startswith(("compiled/", "partition/", "sparse/", "scale/")) and key not in c_rows:
             failures.append(f"coverage: baseline row {key} missing from current run")
 
     if absolute:
@@ -254,6 +261,45 @@ def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) ->
                     f"the host fill-drain reference "
                     f"(max_update_diff={r.get('max_update_diff')!r})"
                 )
+
+    # scale gate: the streamed-graph growth rows (``scale/nN/chunksC``).
+    # Every current row's one-step update must have matched the host
+    # fill-drain oracle in the SAME run fig3 timed (updates_match), and the
+    # run-internal growth ratio step(n)/step(n_min) must stay within
+    # ``threshold`` of the baseline's same ratio — fig3 steps all sizes
+    # interleaved, so machine speed cancels out of the ratio entirely and
+    # what remains is genuinely how step time grows with the graph
+    c_scale = {row["nodes"]: (key, row)
+               for key, row in c_rows.items() if key.startswith("scale/")}
+    b_scale = {row["nodes"]: (key, row)
+               for key, row in b_rows.items() if key.startswith("scale/")}
+    for n, (key, row) in sorted(c_scale.items()):
+        if not row.get("updates_match"):
+            failures.append(
+                f"scale: {key} update diverged from the host fill-drain "
+                f"oracle (max_update_diff={row.get('max_update_diff')!r})"
+            )
+    if b_scale and c_scale:
+        bmin, cmin = min(b_scale), min(c_scale)
+        b0, c0 = b_scale[bmin][1]["step_s"], c_scale[cmin][1]["step_s"]
+        if not (b0 > 0 and c0 > 0):
+            failures.append(
+                f"scale: non-positive anchor step_s (baseline n{bmin}: {b0!r}, "
+                f"current n{cmin}: {c0!r})"
+            )
+        else:
+            for n in sorted((set(b_scale) & set(c_scale)) - {bmin, cmin}):
+                base = b_scale[n][1]["step_s"] / b0
+                cur = c_scale[n][1]["step_s"] / c0
+                status = "ok"
+                if cur > base * threshold:
+                    status = f"REGRESSED >{(threshold - 1):.0%}"
+                    failures.append(
+                        f"scale: {c_scale[n][0]} growth ratio {cur:.3f}x vs "
+                        f"baseline {base:.3f}x (allowed {base * threshold:.3f})"
+                    )
+                print(f"  {c_scale[n][0]:40s} baseline {base:8.3f}x-min "
+                      f"current {cur:8.3f}x-min  {status}")
     return failures
 
 

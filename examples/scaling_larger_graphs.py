@@ -1,10 +1,23 @@
 """Paper §8: "pipeline parallelism is intended to benefit ... much greater
-[graphs] than the PubMed set used here". This example runs the reddit-mini
-stand-in (8192 nodes / 131k edges / 50 classes) and shows where chunking
-starts paying: per-chunk peak activation size drops ~linearly with chunks
-while halo batching keeps accuracy at full-batch level.
+[graphs] than the PubMed set used here". Two parts:
+
+Part 1 runs the reddit-mini stand-in (8192 nodes / 131k edges / 50
+classes) and shows where chunking starts paying: per-chunk peak activation
+size drops ~linearly with chunks while halo batching keeps accuracy at
+full-batch level.
+
+Part 2 goes past what fits in one replica: a STREAMED power-law graph
+(``repro.graphs.open_streamed`` — edges from a per-block counter-based
+RNG, features materialized per chunk on the host, never the whole matrix)
+trained over the 2-D ``("data", "stage")`` mesh when the host has enough
+devices (``data_parallel=2``), with the update checked against the host
+fill-drain oracle. The same code path runs the 10⁶-node registry entry
+(``open_streamed("powerlaw-1m")``) — only chunk count and wall-clock grow.
 
     PYTHONPATH=src python examples/scaling_larger_graphs.py
+    # the mesh path activates with >= data_parallel * stages devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/scaling_larger_graphs.py
 """
 
 import time
@@ -12,11 +25,56 @@ import time
 import jax
 
 from repro.core.microbatch import make_plan
-from repro.core.pipeline import GPipe, GPipeConfig
-from repro.graphs import load_dataset
-from repro.models.gnn.net import build_paper_gat
+from repro.core.pipeline import GPipe, GPipeConfig, make_engine
+from repro.graphs import DoubleBufferedLoader, load_dataset, open_streamed, streamed_plan
+from repro.models.gnn.net import build_gnn, build_paper_gat
 from repro.train import optimizer as opt_lib
 from repro.train.loop import make_eval
+
+
+def streamed_mesh_demo(num_nodes=32_768, chunks=8, epochs=3):
+    """Streamed graph over the (data, stage) mesh, oracle-checked."""
+    t0 = time.time()
+    ds = open_streamed("powerlaw-64k", num_nodes=num_nodes)
+    plan = streamed_plan(ds, chunks, max_degree=32)
+    g0 = plan.batches[0].graph
+    print(f"\nstreamed powerlaw-64k@{num_nodes} built in {time.time()-t0:.1f}s: "
+          f"{chunks} chunks x {g0.num_nodes} nodes, edge_cut={plan.edge_cut:.2f}")
+
+    balance = (2, 2)
+    dp = 2 if jax.device_count() >= 2 * len(balance) else 1
+    model = build_gnn("gcn", g0.num_features, g0.num_classes, hidden=32, depth=2)
+    opt = opt_lib.adam(1e-2)
+    pipe = make_engine(model, GPipeConfig(
+        engine="compiled", balance=balance, chunks=chunks,
+        schedule="1f1b", data_parallel=dp,
+    ))
+    host = make_engine(model, GPipeConfig(engine="host", balance=balance, chunks=chunks))
+
+    params = pipe.init_params(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    rng0 = jax.random.PRNGKey(1)
+    p_ref, _, _ = host.train_step(params, opt.init(params), plan, rng0, opt)
+    p_cmp, _, _ = pipe.train_step(params, opt.init(params), plan, rng0, opt)
+    diff = max(float(abs(a - b).max()) for a, b in zip(
+        jax.tree_util.tree_leaves(p_ref), jax.tree_util.tree_leaves(p_cmp)))
+    print(f"data_parallel={dp} (mesh active: {pipe._data_parallel_active}) "
+          f"vs host fill-drain oracle: max update diff {diff:.2e}")
+
+    # the loader overlaps chunk t+1's device_put with chunk t's compute; on
+    # the training path the stacked plan ships whole, so just demonstrate
+    # the streaming order contract here
+    batches = list(DoubleBufferedLoader(plan.batches[i].graph for i in range(chunks)))
+    assert len(batches) == chunks
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+    for _ in range(epochs):
+        key, rng = jax.random.split(key)
+        params, state, loss = pipe.train_step(params, state, plan, rng, opt)
+    jax.block_until_ready(loss)
+    print(f"epoch_s={(time.time()-t0)/epochs:6.2f} loss@{epochs}ep={float(loss):.3f}")
+    print("scale further: open_streamed('powerlaw-256k') / ('powerlaw-1m') —")
+    print("same code path, chunk count carries the growth (fig3's scale/* rows).")
 
 
 def main():
@@ -51,6 +109,8 @@ def main():
     print("shrink chunks here. This is precisely why GraphSAGE-style sampling")
     print("and SIGN precompute (graphs/sign.py) exist: SIGN makes chunks exact")
     print("AND small regardless of graph density (see tests/test_sign.py).")
+
+    streamed_mesh_demo()
 
 
 if __name__ == "__main__":

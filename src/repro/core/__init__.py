@@ -1,5 +1,6 @@
-# The paper's primary contribution: GPipe-style pipeline parallelism for
-# GNNs (and, generalized, for the assigned transformer pool).
+"""The paper's primary contribution: GPipe-style pipeline parallelism for
+GNNs (and, generalized, for the assigned transformer pool)."""
+
 from repro.core.microbatch import MicroBatch, MicroBatchPlan, make_plan, STRATEGIES
 from repro.core.pipeline import GPipe, GPipeConfig
 from repro.core.schedule import (

@@ -69,6 +69,12 @@ def add_pipeline_args(
                          "neighbor gathers (default), dense masked adjacency, "
                          "or the Pallas kernels over the degree-bucketed "
                          "layout")
+    ap.add_argument("--data-parallel", type=int, default=1,
+                    help="graph-partition replicas on the data axis of a "
+                         "(data, stage) mesh (compiled engine): chunks are "
+                         "sharded data_parallel ways, gradients reduced over "
+                         "the axis in the canonical chunk order, so the "
+                         "update stays bit-identical to 1 replica")
     return ap
 
 
@@ -85,6 +91,7 @@ class PipelineCLIConfig:
     placement: str | None = None
     pipe_devices: int | None = None
     backend: str = "padded"
+    data_parallel: int = 1
 
     @classmethod
     def from_args(cls, args) -> "PipelineCLIConfig":
@@ -103,6 +110,7 @@ class PipelineCLIConfig:
         return self.pipe_devices
 
     def parsed_placement(self) -> Placement | None:
+        """The --placement comma string as a validated ``Placement``."""
         if not self.placement:
             return None
         return Placement(tuple(int(x) for x in self.placement.split(",")))
@@ -128,6 +136,7 @@ class PipelineCLIConfig:
             placement=self.parsed_placement(),
             engine=self.engine,
             backend=self.backend,
+            data_parallel=self.data_parallel,
         )
 
     def namespace(self, **extra) -> types.SimpleNamespace:

@@ -14,6 +14,8 @@ import jax
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` when the native API exists, else the experimental
+    one with replication checking off (its checker predates vma)."""
     if hasattr(jax, "shard_map"):
         kwargs = {} if check_vma is None else {"check_vma": check_vma}
         return jax.shard_map(

@@ -41,11 +41,15 @@ STRATEGIES = ("sequential", "random", "greedy", "halo", "sign")
 # try to hash the arrays); identity semantics are the contract.
 @dataclasses.dataclass(frozen=True, eq=False)
 class MicroBatch:
+    """One pipeline chunk: a sub-graph plus the mask of rows whose loss
+    counts (halo rows ride along for exactness but never contribute)."""
+
     graph: GraphBatch
     core_mask: jnp.ndarray  # (n_chunk,) — True where loss counts
 
     @property
     def num_nodes(self) -> int:
+        """Node count of this chunk's sub-graph (halo included)."""
         return self.graph.num_nodes
 
 
@@ -65,6 +69,10 @@ class StackedPlan:
 
 @dataclasses.dataclass
 class MicroBatchPlan:
+    """The partitioner's output: the ordered chunk list plus the accounting
+    (rebuild cost, edge cut) fig3 reports, with a lazily built stacked
+    uniform-shape view for the compiled engine (``stacked()``)."""
+
     strategy: str
     chunks: int
     batches: list[MicroBatch]

@@ -89,6 +89,10 @@ from repro.train import optimizer as opt_lib
 
 @dataclasses.dataclass(frozen=True)
 class GPipeConfig:
+    """Everything that selects a pipeline: stage balance, chunking, the
+    schedule and its device placement, the engine that executes it, the
+    aggregation backend and the data-parallel width."""
+
     balance: tuple[int, ...]  # layers per stage; sums to len(model.layers)
     chunks: int
     devices: tuple | None = None  # optional per-stage device placement
@@ -106,9 +110,16 @@ class GPipeConfig:
     # layout (graphs.partition.bucketize_stacked) instead of the raw
     # padded batch, so aggregation work tracks the degree distribution.
     backend: str = "padded"
+    # graph data parallelism (compiled engine): replicas on the "data" axis
+    # of a (data, stage) mesh, each running the pipeline over its contiguous
+    # shard of the chunks. Gradients are gathered over the axis and reduced
+    # in the canonical global chunk order, so the update stays bit-identical
+    # to a single replica. Requires chunks % data_parallel == 0.
+    data_parallel: int = 1
 
     @property
     def num_stages(self) -> int:
+        """Pipeline stages (= entries in ``balance``)."""
         return len(self.balance)
 
 
@@ -155,10 +166,12 @@ class EvalProgram:
 
     @property
     def chunks(self) -> int:
+        """Chunk count this program was compiled for."""
         return self.key[0]
 
     @property
     def n_pad(self) -> int:
+        """Padded per-chunk node count this program was compiled for."""
         return self.key[1]
 
     def bind(self, params) -> "EvalProgram":
@@ -207,8 +220,13 @@ class PipelineEngine:
             raise ValueError(
                 f"balance {config.balance} must sum to {len(model.layers)} layers"
             )
+        if config.data_parallel < 1:
+            raise ValueError(f"data_parallel must be >= 1, got {config.data_parallel}")
         self.model = model
         self.config = config
+        # flipped by the compiled engine's step builder when the 2-D
+        # (data, stage) mesh actually runs (enough devices for dp * ring)
+        self._data_parallel_active = False
         self.schedule = get_schedule(config.schedule, num_devices=config.num_devices)
         self.placement = config.placement
         if self.placement is not None:
@@ -232,6 +250,7 @@ class PipelineEngine:
     # ------------------------------------------------------------ stages --
 
     def stage_params(self, params: list, s: int) -> list:
+        """The slice of per-layer params owned by stage ``s``."""
         lo, hi = self._bounds[s]
         return params[lo:hi]
 
@@ -244,6 +263,7 @@ class PipelineEngine:
     # ---------------------------------------------------------- contract --
 
     def init_params(self, key: jax.Array) -> list:
+        """Fresh per-layer params from the wrapped model."""
         return self.model.init_params(key)
 
     def train_step(
@@ -257,6 +277,8 @@ class PipelineEngine:
         record: list | None = None,
         stats: dict | None = None,
     ):
+        """One optimizer step over the plan's chunks; returns
+        ``(params, opt_state, mean_loss)``."""
         raise NotImplementedError
 
     def compile_eval(self, params: list, graph) -> EvalProgram:
@@ -297,6 +319,7 @@ class PipelineEngine:
         return prog.metrics(graph, stacked.core_mask)
 
     def describe(self) -> dict:
+        """Engine + schedule metadata for logs and benchmark tables."""
         d = self.schedule.describe(self.config.num_stages, self.config.chunks)
         d.update(
             {
@@ -308,6 +331,8 @@ class PipelineEngine:
         )
         if self.placement is not None:
             d["placement"] = list(self.placement.stage_to_device)
+        if self.config.data_parallel > 1:
+            d["data_parallel"] = self.config.data_parallel
         return d
 
 
@@ -319,6 +344,11 @@ class GPipe(PipelineEngine):
 
     def __init__(self, model: GNNModel, config: GPipeConfig):
         super().__init__(model, config)
+        if config.data_parallel > 1:
+            raise ValueError(
+                "data_parallel > 1 needs the compiled engine's (data, stage) "
+                "mesh; the host queue loop has no data axis"
+            )
         self._fwd_fns = [self._make_fwd(s) for s in range(config.num_stages)]
         self._bwd_fns = [self._make_bwd(s) for s in range(config.num_stages)]
         # split-backward halves (zb-h1); jit is lazy, so unused schedules
@@ -422,6 +452,8 @@ class GPipe(PipelineEngine):
     # -------------------------------------------------------------- step --
 
     def init_params(self, key: jax.Array) -> list:
+        """Fresh per-layer params, placed on the configured stage devices
+        when the config carries an explicit device list."""
         params = self.model.init_params(key)
         if self.config.devices:
             params = [
@@ -682,8 +714,14 @@ class CompiledGNNPipeline(PipelineEngine):
     def _fill_drain(self) -> bool:
         # a rotated placement re-devices the timeline, which only the
         # scheduled executor understands — fill-drain under a non-identity
-        # ring routes through it instead of the fused axis_index scan
-        return self.config.schedule in ("fill_drain", "gpipe") and self._identity_ring
+        # ring routes through it instead of the fused axis_index scan; the
+        # same goes for data parallelism, whose chunk sharding and gathered
+        # gradient reduction live in the scheduled executor only
+        return (
+            self.config.schedule in ("fill_drain", "gpipe")
+            and self._identity_ring
+            and self.config.data_parallel == 1
+        )
 
     def _mesh_devices(self, num_devices: int):
         """The mesh's device array: position d of the ring is
@@ -784,7 +822,9 @@ class CompiledGNNPipeline(PipelineEngine):
 
         return jax.jit(step)
 
-    def _make_work_fn(self, widths: list[int], params, graph, labels, m, rng, *, phases):
+    def _make_work_fn(
+        self, widths: list[int], params, graph, labels, m, rng, *, phases, chunk_offset=0
+    ):
         """The per-tick work dispatcher for ``spmd_pipeline_scheduled``: one
         ``lax.switch`` over 1 + 4·S branches (idle, then fwd / fused bwd /
         split B / split W per stage; phases the timeline never emits —
@@ -803,7 +843,8 @@ class CompiledGNNPipeline(PipelineEngine):
         S = self.config.num_stages
         model = self.model
         slices = make_gnn_stage_slices(
-            model, self._bounds, widths, graph, rng, train=True
+            model, self._bounds, widths, graph, rng, train=True,
+            chunk_offset=chunk_offset,
         )
         d_travel = travel_width(self._bounds, widths)
         n_pad = graph.features.shape[1]
@@ -820,7 +861,8 @@ class CompiledGNNPipeline(PipelineEngine):
             return ct, loss_sum, count
 
         b_fns, w_fns = make_gnn_stage_slices_bw(
-            model, self._bounds, widths, graph, rng, train=True, loss_ct=loss_ct
+            model, self._bounds, widths, graph, rng, train=True, loss_ct=loss_ct,
+            chunk_offset=chunk_offset,
         )
 
         def zeros_grads():
@@ -891,30 +933,67 @@ class CompiledGNNPipeline(PipelineEngine):
 
         return work_fn
 
+    def _lower_for(self, chunks: int):
+        """Lower the configured schedule's timeline for ``chunks`` chunks
+        (placement re-deviced; the lowering's ring check rejects anything
+        the executors could not route)."""
+        S = self.config.num_stages
+        timeline = self.schedule.timeline(S, chunks)  # raises on bad (S, C)
+        if self.placement is not None:
+            timeline = self.placement.apply(timeline)
+        return lower_timeline(timeline, S, chunks)
+
     def _build_step_scheduled(
         self, widths: list[int], chunks: int, optimizer: opt_lib.Optimizer
     ):
         """One jitted train step executing the configured 1F1B/interleaved
         timeline: shard_map over the schedule's device count when the host
         has enough devices, else the lane-stacked substrate of the same
-        dataflow (``spmd_pipeline_scheduled_lanes``)."""
+        dataflow (``spmd_pipeline_scheduled_lanes``).
+
+        ``config.data_parallel`` (dp) > 1 widens the mesh to 2-D ``(data,
+        stage)`` — the fsdp×stage composition the transformer ``Topology``
+        runs, with graph-partition shards in place of batch shards: the
+        stacked plan's leading chunk axis is sharded dp ways, replica ``r``
+        pipelines its contiguous local chunks ``[r·C/dp, (r+1)·C/dp)``
+        through the per-replica timeline, and the executor gathers the
+        per-chunk gradient slots over the data axis to reduce them in the
+        canonical GLOBAL chunk order — bit-identical to one replica (each
+        (layer, chunk) gradient lives on exactly one replica and stage; see
+        ``spmd_pipeline_scheduled``). Dropout keys stay global through the
+        ``chunk_offset`` fold in the stage slices. With fewer than dp·ring
+        devices the step falls back to the single-replica substrate over
+        all chunks — the identical update, just not data-distributed."""
         S = self.config.num_stages
-        timeline = self.schedule.timeline(S, chunks)  # raises on bad (S, C)
-        if self.placement is not None:
-            # re-device onto the configured ring rotation; the lowering's
-            # ring check rejects anything the executors could not route
-            timeline = self.placement.apply(timeline)
-        lowered = lower_timeline(timeline, S, chunks)
-        self._lowered[chunks] = lowered
+        dp = self.config.data_parallel
+        if dp > 1 and chunks % dp:
+            raise ValueError(
+                f"chunks {chunks} must split evenly across data_parallel={dp} "
+                f"replicas"
+            )
+        lowered = self._lower_for(chunks // dp if dp > 1 else chunks)
         D = lowered.num_devices
+        dp_active = dp > 1 and jax.device_count() >= dp * D
+        if dp > 1 and not dp_active:
+            lowered = self._lower_for(chunks)
+            D = lowered.num_devices
+        self._lowered[chunks] = lowered
+        self._data_parallel_active = dp_active
         d_travel = travel_width(self._bounds, widths)
 
-        spmd = jax.device_count() >= D
+        spmd = dp_active or jax.device_count() >= D
         phases = set(np.unique(lowered.phase).tolist())
 
         def local(params, graph, labels, m, rng):
+            offset = 0
+            if dp_active:
+                # graph/labels/m arrive as this replica's chunk shard and are
+                # indexed by LOCAL chunk id; only the dropout-key fold needs
+                # the global id (host-engine bitwise compatibility)
+                offset = lax.axis_index("data") * (chunks // dp)
             work_fn = self._make_work_fn(
-                widths, params, graph, labels, m, rng, phases=phases
+                widths, params, graph, labels, m, rng, phases=phases,
+                chunk_offset=offset,
             )
             wire_like = jnp.zeros(
                 (graph.features.shape[1], d_travel), graph.features.dtype
@@ -923,12 +1002,30 @@ class CompiledGNNPipeline(PipelineEngine):
                 return spmd_pipeline_scheduled(
                     work_fn, lowered, stage_axis="stage",
                     wire_like=wire_like, grads_like=params,
+                    data_axis="data" if dp_active else None,
                 )
             return spmd_pipeline_scheduled_lanes(
                 work_fn, lowered, wire_like=wire_like, grads_like=params
             )
 
-        if spmd:
+        if dp_active:
+            grid = np.array(jax.devices()[: dp * D]).reshape(dp, D)
+            p = self.placement
+            if p is not None and p.device_order is not None and len(p.device_order) == D:
+                # the ring's device order picks which column of each replica
+                # row occupies which ring position
+                grid = grid[:, list(p.device_order)]
+            mesh = jax.sharding.Mesh(grid, ("data", "stage"))
+            # check_vma=False: the executor's post-scan all_gather leaves the
+            # gathered slots marked varying over "data" even though every
+            # replica then reduces them to the same value; the old-API
+            # shard_map (check_rep=False) never tracked this at all
+            mapped = compat.shard_map(
+                local, mesh=mesh,
+                in_specs=(P(), P("data"), P("data"), P("data"), P()),
+                out_specs=P(), check_vma=False,
+            )
+        elif spmd:
             mesh = jax.sharding.Mesh(self._mesh_devices(D), ("stage",))
             mapped = compat.shard_map(
                 local, mesh=mesh, in_specs=(P(),) * 5, out_specs=P()
@@ -1074,6 +1171,8 @@ class CompiledGNNPipeline(PipelineEngine):
         record: list | None = None,  # per-item timings don't exist in a fused program
         stats: dict | None = None,
     ):
+        """One fused SPMD step over the stacked plan (compiled per
+        ``(chunks, n_pad, max_deg, optimizer)`` shape key and cached)."""
         stacked = plan.stacked()
         graph = self.layout(stacked.graph)
         if self._widths is None:

@@ -42,6 +42,30 @@ greedy list scheduler whose dependency graph encodes both data flow and the
 Module-level ``fill_drain_timeline`` / ``bubble_fraction`` /
 ``predicted_step_time`` are kept as the fill-drain shorthand (the paper's
 formulas, used throughout the benchmarks).
+
+Lowering contract (``lower_timeline`` -> ``LoweredTimeline``) — the bridge
+between a ``WorkItem`` timeline and the compiled executors: the timeline
+becomes dense per-tick ``(T, D)`` index arrays (phase / stage / chunk) plus
+stash-slot routing, one slot family per buffer kind:
+
+  * **fslot** — activation-stash slots. ``in_fslot[t, d]`` banks the
+    forward-wire value arriving at device d this tick; ``work_fslot[t, d]``
+    is where this tick's item reads its stage input (bwd/bwd_b re-derive
+    the vjp from it — GPipe re-materialization).
+  * **bslot** — cotangent-stash slots, same in/work pattern for the
+    backward wire.
+  * **wslot** — deferred-W residual slots: ``bwd_b`` writes its residual to
+    ``store_wslot``; the matching ``bwd_w`` reads ``work_wslot``. Empty
+    (``n_wslots == 0``) for fused-backward schedules.
+
+Slot indices come from a FREE-LIST simulation over the timeline (allocate
+at arrival, release after last read, reuse eagerly), so ``n_fslots`` /
+``n_bslots`` / ``n_wslots`` are the schedule's *real* live windows — 1F1B
+lowers to ~min(S, C) activation slots where fill-drain needs C — and the
+executors' stash arrays are sized by them, never by S*C. Every slot array
+reserves index ``n_*slots`` as the sacrificial slot: idle ticks read/write
+it so the scan body stays branch-free. See ``LoweredTimeline`` for the
+authoritative field-by-field statement.
 """
 
 from __future__ import annotations
@@ -57,6 +81,9 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class WorkItem:
+    """One scheduled unit of work: (tick, stage, chunk, phase, device) —
+    the element every timeline is a sorted list of."""
+
     tick: int
     stage: int
     chunk: int
@@ -101,6 +128,7 @@ class Placement:
 
     @property
     def num_devices(self) -> int:
+        """Physical ring size implied by the stage->device map."""
         return max(self.stage_to_device) + 1
 
     @classmethod
@@ -122,6 +150,8 @@ class Placement:
         ).validate(num_stages)
 
     def validate(self, num_stages: int) -> "Placement":
+        """Check stage count, device contiguity and device_order arity;
+        returns self for chaining."""
         std = self.stage_to_device
         if len(std) != num_stages:
             raise ValueError(
@@ -718,9 +748,11 @@ class Schedule(abc.ABC):
         return num_stages
 
     def device_of(self, stage: int, num_stages: int) -> int:
+        """Physical device hosting ``stage`` (identity by default)."""
         return stage
 
     def ticks(self, num_stages: int, num_chunks: int) -> int:
+        """Makespan of the unit-cost timeline in ticks."""
         return max(it.tick for it in self.timeline(num_stages, num_chunks)) + 1
 
     def bubble_fraction(self, num_stages: int, num_chunks: int) -> float:
@@ -733,6 +765,7 @@ class Schedule(abc.ABC):
         return 1.0 - len(tl) / (D * T)
 
     def peak_live_activations(self, num_stages: int, num_chunks: int) -> int:
+        """Max simultaneously stashed chunk inputs across stages."""
         return peak_live_activations(self.timeline(num_stages, num_chunks))
 
     def predicted_step_time(
@@ -780,6 +813,7 @@ class Schedule(abc.ABC):
         raise NotImplementedError
 
     def describe(self, num_stages: int, num_chunks: int) -> dict:
+        """Name + derived stats bundle for logs and benchmark tables."""
         return {
             "schedule": self.name,
             "num_stages": num_stages,
@@ -797,6 +831,7 @@ class FillDrainSchedule(Schedule):
     name = "fill_drain"
 
     def timeline(self, num_stages: int, num_chunks: int) -> list[WorkItem]:
+        """All-forwards wave then all-backwards wave (GPipe's order)."""
         S, C = num_stages, num_chunks
         items: list[WorkItem] = []
         # forward: stage s handles chunk c at tick c + s
@@ -816,13 +851,15 @@ class FillDrainSchedule(Schedule):
         return sorted(items, key=_sort_key)
 
     def ticks(self, num_stages: int, num_chunks: int) -> int:
+        """Closed form: 2 (C + S - 1)."""
         return 2 * (num_chunks + num_stages - 1)
 
     def bubble_fraction(self, num_stages: int, num_chunks: int) -> float:
+        """GPipe's (S - 1) / (C + S - 1)."""
         return (num_stages - 1) / (num_chunks + num_stages - 1)
 
     def peak_live_activations(self, num_stages: int, num_chunks: int) -> int:
-        # every stage holds all C inputs when the forward finishes
+        """S * C: every stage holds all C inputs when the forward ends."""
         return num_stages * num_chunks
 
     def predicted_step_time(
@@ -837,6 +874,8 @@ class FillDrainSchedule(Schedule):
         stage_fwd_costs=None,
         stage_bwd_costs=None,
     ) -> float:
+        """Closed-form fill-drain makespan for uniform stages; falls back
+        to the generic weighted makespan when per-stage costs differ."""
         if stage_fwd_costs is not None or stage_bwd_costs is not None:
             # heterogeneous stages: no closed form — the generic weighted
             # makespan over fill-drain's fixed per-device op streams
@@ -885,6 +924,7 @@ class OneFOneBSchedule(Schedule):
         )
 
     def timeline(self, num_stages: int, num_chunks: int) -> list[WorkItem]:
+        """1F1B order: warmup forwards, strict alternation, drain."""
         ops, _ = self._ops(num_stages, num_chunks)
         return _ops_to_items(ops, lambda s: s)
 
@@ -911,9 +951,11 @@ class InterleavedSchedule(Schedule):
         self.num_physical = num_physical
 
     def num_devices(self, num_stages: int) -> int:
+        """The configured physical-device count (V stages share each)."""
         return self.num_physical
 
     def device_of(self, stage: int, num_stages: int) -> int:
+        """Round-robin: virtual stage k lives on device k mod D."""
         return stage % self.num_physical
 
     def _check(self, S, C):
@@ -960,6 +1002,7 @@ class InterleavedSchedule(Schedule):
         return _ordered_timeline(self._streams(S, C), S, fwd_cost=f, bwd_cost=b)
 
     def timeline(self, num_stages: int, num_chunks: int) -> list[WorkItem]:
+        """Megatron's interleaved 1F1B over V virtual stages per device."""
         ops, _ = self._ops(num_stages, num_chunks)
         D = self.num_physical
         return _ops_to_items(ops, lambda s: s % D)
@@ -1035,6 +1078,8 @@ class ZeroBubbleH1Schedule(Schedule):
         return done, makespan
 
     def timeline(self, num_stages: int, num_chunks: int) -> list[WorkItem]:
+        """1F1B's F/B order with every backward split into B then a
+        bubble-filling deferred W (zero-bubble H1)."""
         ops, _ = self._ops(num_stages, num_chunks)
         return _ops_to_items(ops, lambda s: s)
 
@@ -1052,6 +1097,7 @@ class ZeroBubbleH1Schedule(Schedule):
         stage_bwd_b_costs=None,
         stage_bwd_w_costs=None,
     ) -> float:
+        """Weighted zb-h1 makespan with the B/W split costed separately."""
         # the wire hop belongs to B alone — W consumes a local residual and
         # sends nothing, so it carries no transfer term. The B/W split is
         # the MEASURED one when the caller provides both halves (the
@@ -1102,6 +1148,7 @@ def get_schedule(name: str, *, num_devices: int | None = None) -> Schedule:
 
 
 def fill_drain_timeline(num_stages: int, num_chunks: int) -> list[WorkItem]:
+    """The paper's fill-drain timeline (module-level shorthand)."""
     return FillDrainSchedule().timeline(num_stages, num_chunks)
 
 

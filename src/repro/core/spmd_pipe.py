@@ -37,6 +37,29 @@ GPipe's activation re-materialization is the ``remat`` flag (jax.checkpoint
 around the per-tick stage body). Gradients flow through ``ppermute``/scan —
 the backward pipeline — and FSDP all-gathers inside ``stage_fn`` transpose
 into gradient reduce-scatters (ZeRO-3) automatically.
+
+Scheduled-executor tick contract (see ``LoweredTimeline`` in
+``repro.core.schedule`` for the slot-routing fields): every scan tick, on
+every device, in this order —
+
+  1. bank the arriving forward wire into activation-stash slot
+     ``in_fslot[t, d]`` and the arriving backward wire into cotangent slot
+     ``in_bslot[t, d]`` (idle devices bank into the sacrificial slot);
+  2. read the tick's stage input from ``work_fslot`` / cotangent from
+     ``work_bslot`` / deferred-W residual from ``work_wslot``, run the
+     phase's work fn (fwd, fused bwd, or the zb-h1 split: ``bwd_b`` emits
+     the upstream cotangent + banks a residual at ``store_wslot``,
+     ``bwd_w`` turns a residual into parameter grads);
+  3. accumulate grads into the per-(layer, chunk) slot of ``gbuf`` (slot C
+     is sacrificial), then ``ppermute`` both wires one ring hop.
+
+Stash sizes are the free-list results ``n_fslots``/``n_bslots``/
+``n_wslots`` — the schedule's true live windows, NOT S*C — each +1 for the
+sacrificial slot. After the scan, per-chunk gradients reduce in canonical
+descending-chunk order (gathered over the optional ``data_axis`` first, in
+descending replica order), then ``psum`` over the stage ring — which is why
+every schedule, placement, and data-parallel width produces bit-identical
+updates.
 """
 
 from __future__ import annotations
@@ -243,6 +266,7 @@ def spmd_pipeline_scheduled(
     wire_like: jax.Array,
     grads_like: Any,
     vma_refs: tuple = (),
+    data_axis: str | None = None,
 ):
     """Schedule-aware pipeline executor: runs an arbitrary (validated,
     ring-compatible) ``WorkItem`` timeline — 1F1B, interleaved 1F1B, or any
@@ -302,6 +326,17 @@ def spmd_pipeline_scheduled(
     returned ``(grads, loss_sum, count)`` are psum-replicated over
     ``stage_axis`` (each device contributes exactly its stages' layer
     gradients, zeros elsewhere).
+
+    ``data_axis`` composes the ring with graph data parallelism on a 2-D
+    ``(data, stage)`` mesh: each data replica runs this executor over its
+    own contiguous shard of the chunks (replica ``r`` owns global chunks
+    ``[r*C_local, (r+1)*C_local)``), and the per-chunk gradient buffers are
+    ``all_gather``-ed over the axis so the post-scan reduction can walk ALL
+    global chunks in the same canonical descending order. Each (layer,
+    chunk) gradient is nonzero on exactly one replica and one stage, so the
+    gather + ordered sum (and the stage psum after it) only ever add zeros
+    to the single real addend — the data axis changes WHERE chunks run,
+    never the float associativity of the update.
     """
     from repro.core.schedule import PHASE_BWD, PHASE_BWD_W
     from repro.core.vma import match_vma
@@ -389,8 +424,21 @@ def spmd_pipeline_scheduled(
     # engine's fill-drain drain order — so floats accumulate identically no
     # matter which schedule produced the per-chunk gradients
     grads = tree_map(lambda b: jnp.zeros(b.shape[1:], b.dtype), gbuf)
-    for c in reversed(range(C)):
-        grads = tree_map(lambda g, b, c=c: g + b[c], grads, gbuf)
+    if data_axis is None:
+        for c in reversed(range(C)):
+            grads = tree_map(lambda g, b, c=c: g + b[c], grads, gbuf)
+    else:
+        # gather every replica's per-chunk slots (leaves (dp, C+1, ...)) and
+        # reduce over GLOBAL chunks in the same descending order a single
+        # replica would use: global chunk r*C + c descends as (r, c) descends
+        # lexicographically. Exact, not just close — see the docstring.
+        gall = tree_map(lambda b: lax.all_gather(b, data_axis), gbuf)
+        dp = jax.tree_util.tree_leaves(gall)[0].shape[0]
+        for r in reversed(range(dp)):
+            for c in reversed(range(C)):
+                grads = tree_map(lambda g, b, r=r, c=c: g + b[r, c], grads, gall)
+        loss = jnp.sum(lax.all_gather(loss, data_axis))
+        count = jnp.sum(lax.all_gather(count, data_axis))
     grads = lax.psum(grads, stage_axis)
     loss = lax.psum(loss, stage_axis)
     count = lax.psum(count, stage_axis)

@@ -15,6 +15,8 @@ from jax import lax
 
 
 def vma_of(*refs) -> frozenset[str]:
+    """Union of the varying-manual-axes sets across every leaf of ``refs``
+    (empty on jax versions that predate vma tracking)."""
     axes: frozenset[str] = frozenset()
     for r in refs:
         for leaf in jax.tree_util.tree_leaves(r):

@@ -1,3 +1,6 @@
+"""Graph substrate: padded/bucketed batch layouts, the paper datasets,
+the streamed power-law generator, and the chunk partitioners."""
+
 from repro.graphs.data import (
     BucketedGraphBatch,
     DegreeBucket,
@@ -6,11 +9,20 @@ from repro.graphs.data import (
     subgraph,
     validate_graph,
 )
-from repro.graphs.datasets import DATASETS, SKEWED_DATASETS, load_dataset
+from repro.graphs.datasets import (
+    DATASETS,
+    SKEWED_DATASETS,
+    STREAMED_DATASETS,
+    DoubleBufferedLoader,
+    StreamedPowerlaw,
+    load_dataset,
+    open_streamed,
+)
 from repro.graphs.partition import (
     bucketize_stacked,
     degree_bucket_widths,
     degree_bucketed_layout,
+    streamed_plan,
 )
 
 __all__ = [
@@ -21,8 +33,13 @@ __all__ = [
     "subgraph",
     "validate_graph",
     "load_dataset",
+    "open_streamed",
+    "streamed_plan",
     "DATASETS",
     "SKEWED_DATASETS",
+    "STREAMED_DATASETS",
+    "StreamedPowerlaw",
+    "DoubleBufferedLoader",
     "degree_bucket_widths",
     "degree_bucketed_layout",
     "bucketize_stacked",

@@ -57,14 +57,18 @@ class GraphBatch:
 
     @property
     def num_nodes(self) -> int:
+        """Rows in the batch (padding rows included once padded)."""
         return self.features.shape[0]
 
     @property
     def max_degree(self) -> int:
+        """Width of the padded neighbor table (excluding nothing: slot 0
+        is the self-loop)."""
         return self.neighbors.shape[1]
 
     @property
     def num_features(self) -> int:
+        """Feature dimensionality."""
         return self.features.shape[1]
 
     @property
@@ -96,10 +100,12 @@ class DegreeBucket:
 
     @property
     def width(self) -> int:
+        """Neighbor-slot width of this bucket's tile."""
         return self.neighbors.shape[-1]
 
     @property
     def rows(self) -> int:
+        """Row capacity of this bucket's tile (padding rows included)."""
         return self.neighbors.shape[-2]
 
 

@@ -30,6 +30,8 @@ def sequential_partition(num_nodes: int, chunks: int) -> list[np.ndarray]:
 
 
 def random_partition(num_nodes: int, chunks: int, *, seed: int = 0) -> list[np.ndarray]:
+    """Uniformly random node split — the locality-free baseline the greedy
+    partitioner is compared against."""
     rng = np.random.default_rng(seed)
     perm = rng.permutation(num_nodes)
     return [np.sort(p) for p in np.array_split(perm, chunks)]
@@ -299,3 +301,36 @@ def edge_cut_fraction(g: GraphBatch, parts: list[np.ndarray]) -> float:
     cut = (owner[nbr] != src_owner) & msk
     total = msk.sum()
     return float(cut.sum()) / float(max(total, 1))
+
+
+def streamed_plan(ds, chunks: int, *, max_degree: int | None = None):
+    """Micro-batch plan over a ``repro.graphs.datasets.StreamedPowerlaw``:
+    ``chunks`` contiguous node ranges, each materialized independently via
+    ``ds.chunk_batch`` so the full graph never exists in memory — the
+    streamed analogue of ``make_plan(..., strategy="sequential")`` (same
+    lossy boundary semantics, same all-core masks, same plan container the
+    pipeline engines consume).
+
+    ``edge_cut`` is computed from the generator's own drop counts (edges
+    generated with exactly one endpoint inside a chunk), since there is no
+    whole graph to diff against.
+    """
+    import time
+
+    from repro.core.microbatch import MicroBatch, MicroBatchPlan
+
+    t0 = time.perf_counter()
+    batches, kept, dropped = [], 0, 0
+    for lo, hi in ds.chunk_ranges(chunks):
+        g = ds.chunk_batch(lo, hi, max_degree=max_degree)
+        _, d = ds.chunk_edges(lo, hi)
+        kept += int(g.num_edges) // 2
+        dropped += d
+        batches.append(MicroBatch(graph=g, core_mask=jnp.ones(g.num_nodes, dtype=bool)))
+    return MicroBatchPlan(
+        strategy="streamed",
+        chunks=chunks,
+        batches=batches,
+        rebuild_seconds=time.perf_counter() - t0,
+        edge_cut=float(dropped) / float(max(kept + dropped, 1)),
+    )

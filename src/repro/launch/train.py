@@ -52,12 +52,33 @@ def run_gnn(args) -> dict:
     from repro.core.cli import PipelineCLIConfig
     from repro.core.microbatch import make_plan
     from repro.core.pipeline import make_engine
-    from repro.graphs import load_dataset
+    from repro.graphs import (
+        STREAMED_DATASETS,
+        load_dataset,
+        open_streamed,
+        streamed_plan,
+    )
     from repro.models.gnn.net import build_paper_gat
     from repro.train import optimizer as opt_lib
     from repro.train.loop import make_eval, train
 
-    g = load_dataset(args.dataset, seed=args.seed)
+    streamed = args.dataset in STREAMED_DATASETS
+    if streamed:
+        # streamed graphs never materialize whole — the pipeline path is the
+        # only consumer (chunks generated block-by-block on the host), and
+        # evaluation has to run over the plan, not a full-graph batch
+        if args.stages <= 1:
+            raise ValueError(
+                f"streamed dataset {args.dataset!r} requires the pipeline path (--stages > 1)"
+            )
+        stream_plan = streamed_plan(
+            open_streamed(args.dataset, seed=args.seed, num_nodes=args.num_nodes),
+            args.chunks,
+            max_degree=args.max_degree,
+        )
+        g = stream_plan.batches[0].graph
+    else:
+        g = load_dataset(args.dataset, seed=args.seed)
     gat_kwargs = {}
     if args.backend == "pallas":
         # the fused pallas GAT kernel is deterministic; training it with the
@@ -84,7 +105,10 @@ def run_gnn(args) -> dict:
     cli = PipelineCLIConfig.from_args(args)
     schedule, engine, partition = cli.schedule, cli.engine, cli.partition
     pipe_devices = cli.resolved_pipe_devices
-    plan = make_plan(g, args.chunks, strategy=args.strategy, halo_hops=2, seed=args.seed)
+    if streamed:
+        plan = stream_plan
+    else:
+        plan = make_plan(g, args.chunks, strategy=args.strategy, halo_hops=2, seed=args.seed)
 
     if partition == "profiled":
         # cost-model-driven balance: measure per-layer fwd/B/W cost on one
@@ -119,7 +143,7 @@ def run_gnn(args) -> dict:
 
     pipe = make_engine(model, cli.gpipe_config(balance))
     print(f"[gnn] engine={engine} stages={args.stages} chunks={args.chunks} "
-          f"strategy={args.strategy} schedule={schedule} balance={balance} "
+          f"strategy={plan.strategy} schedule={schedule} balance={balance} "
           f"edge_cut={plan.edge_cut:.3f} rebuild_s={plan.rebuild_seconds:.3f} "
           f"bubble={pipe.describe()['bubble_fraction']:.2f}")
 
@@ -128,10 +152,12 @@ def run_gnn(args) -> dict:
     params = pipe.init_params(init_key)
     optimizer = opt_lib.adam(5e-3, weight_decay=5e-4)
     opt_state = optimizer.init(params)
-    if engine == "compiled":
+    if engine == "compiled" or streamed:
         # validation runs through the engine's forward-only jitted pipeline
         # (no host full-batch fallback): same metric dict, computed over the
-        # plan's core nodes by the scheduled executor's eval twin
+        # plan's core nodes by the scheduled executor's eval twin. Streamed
+        # datasets have no full-graph batch, so the host engine evaluates
+        # over the plan too.
         evaluate = lambda p, _g: pipe.evaluate(p, plan)  # noqa: E731
     else:
         evaluate = make_eval(model)
@@ -153,7 +179,7 @@ def run_gnn(args) -> dict:
             print(f"epoch {epoch:4d} loss {float(loss):.4f} val {float(m['val_acc']):.3f}")
     m = evaluate(params, g)
     out = {
-        "mode": f"gpipe-{args.strategy}",
+        "mode": f"gpipe-{plan.strategy}",
         "engine": engine,
         "schedule": schedule,
         "partition": partition,
@@ -277,6 +303,10 @@ def main():
     # --placement/--backend
     add_pipeline_args(ap)
     ap.add_argument("--epochs", type=int, default=300)
+    ap.add_argument("--num-nodes", type=int, default=None,
+                    help="streamed datasets only: override the registry node count")
+    ap.add_argument("--max-degree", type=int, default=32,
+                    help="streamed datasets only: neighbor-slot cap per node")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)

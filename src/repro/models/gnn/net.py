@@ -223,6 +223,7 @@ def make_gnn_stage_slices(
     rng: jax.Array,
     *,
     train: bool = True,
+    chunk_offset=0,
 ):
     """Params-EXPLICIT per-stage slice functions for the scheduled executor
     (``spmd_pipeline_scheduled``), which differentiates stages explicitly
@@ -241,7 +242,13 @@ def make_gnn_stage_slices(
 
     Per-(chunk, layer) dropout keys are derived exactly as the host engine
     derives them (``split(fold_in(rng, chunk), n_layers)``), keeping every
-    schedule×engine combination bitwise-comparable.
+    schedule×engine combination bitwise-comparable. Under data parallelism
+    the chunk id traveling the pipeline is LOCAL to the replica while the
+    host engine folds the GLOBAL chunk id; ``chunk_offset`` (a traced scalar
+    — each replica passes ``axis_index("data") * chunks_per_replica``) is
+    added before the fold so the keys stay bitwise identical. It offsets
+    ONLY the rng derivation: graph slicing keeps the local id, because each
+    replica's stacked graph shard is indexed locally.
     """
     n_layers = len(model.layers)
     d_travel = travel_width(bounds, widths)
@@ -254,7 +261,7 @@ def make_gnn_stage_slices(
                 lambda a: jax.lax.dynamic_index_in_dim(a, chunk, 0, keepdims=False),
                 graph,
             )
-            rngs = jax.random.split(jax.random.fold_in(rng, chunk), n_layers)
+            rngs = jax.random.split(jax.random.fold_in(rng, chunk + chunk_offset), n_layers)
             h = g.features if lo == 0 else h_in[:, : widths[lo]]
             for i in range(lo, hi):
                 h = model.layers[i].apply(params[i], g, h, rngs[i], train)
@@ -274,6 +281,7 @@ def make_gnn_stage_slices_bw(
     *,
     train: bool = True,
     loss_ct=None,
+    chunk_offset=0,
 ):
     """Split-backward (zero-bubble) halves of ``make_gnn_stage_slices``: the
     stage backward is cut along the vjp's two cotangent outputs so the
@@ -306,7 +314,9 @@ def make_gnn_stage_slices_bw(
     is almost entirely dead code — mirroring zb-h1's accounting, where the
     first stage's critical-path backward is free.
     """
-    slices = make_gnn_stage_slices(model, bounds, widths, graph, rng, train=train)
+    slices = make_gnn_stage_slices(
+        model, bounds, widths, graph, rng, train=train, chunk_offset=chunk_offset
+    )
     zero = jnp.zeros((), jnp.float32)
 
     def make(s: int):

@@ -234,6 +234,66 @@ def test_sparse_gate_coverage():
     ), failures
 
 
+# ------------------------------------------------------------- scale gate --
+
+
+def _scale_rows(s1=0.05, s2=0.10, s4=0.22, *, match=True):
+    rows = _base_rows()
+    for n, s in ((25_000, s1), (50_000, s2), (100_000, s4)):
+        rows[f"scale/n{n}/chunks{max(n // 25_000, 2)}"] = {
+            "step_s": s, "nodes": n, "max_update_diff": 0.0,
+            "updates_match": match, "edge_cut": 0.4,
+            "data_parallel_active": True,
+        }
+    return rows
+
+
+def test_scale_gate_passes_on_identical_tables():
+    t = _table(**_scale_rows())
+    assert check(t, t, threshold=1.2, absolute=False) == []
+
+
+def test_scale_gate_growth_ratio_is_machine_cancelling():
+    base = _table(**_scale_rows(0.05, 0.10, 0.22))
+    # uniformly 3x slower machine: every ratio to n_min is unchanged
+    slower = _table(**_scale_rows(0.15, 0.30, 0.66))
+    assert check(base, slower, threshold=1.2, absolute=False) == []
+    # superlinear blow-up at the largest size: ratio 8.0x vs baseline 4.4x
+    regressed = _table(**_scale_rows(0.05, 0.10, 0.40))
+    failures = check(base, regressed, threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("scale:") and "growth ratio" in f and "n100000" in f
+        for f in failures
+    ), failures
+
+
+def test_scale_gate_requires_updates_match():
+    base = _table(**_scale_rows())
+    bad = _table(**_scale_rows(match=False))
+    failures = check(base, bad, threshold=1.2, absolute=False)
+    assert any(f.startswith("scale:") and "diverged" in f for f in failures), failures
+
+
+def test_scale_gate_coverage_fails_by_name():
+    base = _table(**_scale_rows())
+    cur = dict(_scale_rows())
+    del cur["scale/n100000/chunks4"]
+    failures = check(base, _table(**cur), threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("coverage:") and "scale/n100000/chunks4" in f
+        for f in failures
+    ), failures
+
+
+def test_scale_gate_zero_anchor_fails():
+    base = _table(**_scale_rows())
+    cur = _table(**_scale_rows(s1=0.0))
+    failures = check(base, cur, threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("scale:") and "non-positive anchor" in f for f in failures
+    ), failures
+
+
 # ----------------------------------------------------------- kernels gate --
 
 

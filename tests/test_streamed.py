@@ -1,0 +1,183 @@
+"""Streamed power-law generator: chunk-invariance, padded-layout equality,
+plan construction, and the double-buffered host->device loader.
+
+The generator's contract (see ``repro.graphs.datasets``) is that every chunk
+``[lo, hi)`` is a pure function of (name, seed, node ids) — independent of
+how the node axis is split. These tests pin that down by comparing arbitrary
+(including block-misaligned) ranges against restrictions of a whole-graph
+build, and check the vectorized padded-row constructor against the reference
+``build_graph_batch`` path edge-list for edge-list.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st  # optional-hypothesis shim
+
+from repro.graphs import (
+    STREAMED_DATASETS,
+    DoubleBufferedLoader,
+    open_streamed,
+    streamed_plan,
+    validate_graph,
+)
+from repro.graphs.data import build_graph_batch
+from repro.graphs.datasets import _padded_rows_from_edges
+
+N_SMALL = 2048  # overridden node count: full graph stays test-sized
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return open_streamed("powerlaw-64k", num_nodes=N_SMALL, block_size=512)
+
+
+def _edge_set(edges):
+    return {(int(a), int(b)) for a, b in edges}
+
+
+def test_registry_and_override():
+    assert set(STREAMED_DATASETS) == {"powerlaw-64k", "powerlaw-256k", "powerlaw-1m"}
+    full = open_streamed("powerlaw-64k")
+    assert full.num_nodes == 65_536
+    small = open_streamed("powerlaw-64k", num_nodes=100)
+    assert small.num_nodes == 100
+    with pytest.raises(KeyError):
+        open_streamed("not-a-dataset")
+
+
+def test_chunk_edges_is_restriction(ds):
+    """Edges of any sub-range are exactly the whole-graph edges with both
+    endpoints inside it — chunking can drop cut edges but never invent,
+    move, or duplicate any."""
+    full, _ = ds.chunk_edges(0, ds.num_nodes)
+    full_set = _edge_set(full)
+    for lo, hi in [(0, 512), (512, 1024), (300, 900), (1, ds.num_nodes - 1)]:
+        sub, dropped = ds.chunk_edges(lo, hi)
+        want = {(a - lo, b - lo) for a, b in full_set if lo <= a < hi and lo <= b < hi}
+        assert _edge_set(sub) == want, (lo, hi)
+        # every proper sub-range of a connected power-law graph cuts edges
+        assert dropped > 0, (lo, hi)
+
+
+def test_chunk_batch_fields_are_chunk_invariant(ds):
+    """Per-node fields (features, labels, splits) of a misaligned chunk are
+    bit-equal to the same rows of the whole-graph build."""
+    whole = ds.chunk_batch(0, ds.num_nodes)
+    lo, hi = 300, 900  # straddles block boundaries at 512
+    part = ds.chunk_batch(lo, hi)
+    assert part.num_nodes == hi - lo
+    np.testing.assert_array_equal(
+        np.asarray(part.features), np.asarray(whole.features)[lo:hi])
+    np.testing.assert_array_equal(
+        np.asarray(part.labels), np.asarray(whole.labels)[lo:hi])
+    np.testing.assert_array_equal(
+        np.asarray(part.train_mask), np.asarray(whole.train_mask)[lo:hi])
+    np.testing.assert_array_equal(
+        np.asarray(part.node_ids), np.arange(lo, hi))
+    validate_graph(part)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(64, 1024))
+def test_chunk_batch_property_any_range(start, width):
+    """Property form of chunk invariance: ANY [lo, lo+width) range agrees
+    with the whole-graph restriction on per-node fields and kept edges."""
+    ds = open_streamed("powerlaw-64k", num_nodes=N_SMALL, block_size=512)
+    lo = start % (ds.num_nodes - 64)
+    hi = min(lo + width, ds.num_nodes)
+    whole = ds.chunk_batch(0, ds.num_nodes)
+    part = ds.chunk_batch(lo, hi)
+    np.testing.assert_array_equal(
+        np.asarray(part.features), np.asarray(whole.features)[lo:hi])
+    np.testing.assert_array_equal(
+        np.asarray(part.labels), np.asarray(whole.labels)[lo:hi])
+    full_set = _edge_set(ds.chunk_edges(0, ds.num_nodes)[0])
+    want = {(a - lo, b - lo) for a, b in full_set if lo <= a < hi and lo <= b < hi}
+    assert _edge_set(ds.chunk_edges(lo, hi)[0]) == want
+
+
+def test_degree_distribution_sanity(ds):
+    """The zipf degree draw produces an actual heavy tail: max degree well
+    above the median, capped by deg_cap, and no isolated-majority."""
+    edges, _ = ds.chunk_edges(0, ds.num_nodes)
+    deg = np.bincount(np.concatenate([edges[:, 0], edges[:, 1]]),
+                      minlength=ds.num_nodes)
+    assert np.median(deg) >= 1
+    assert deg.max() > 4 * np.median(deg)  # heavy tail
+    # target degree was capped; unions of undirected pairs can at most double
+    assert deg.max() <= 2 * ds.deg_cap
+    assert (deg == 0).mean() < 0.1
+
+
+def test_split_fractions(ds):
+    b = ds.chunk_batch(0, ds.num_nodes)
+    tr = float(np.asarray(b.train_mask).mean())
+    va = float(np.asarray(b.val_mask).mean())
+    te = float(np.asarray(b.test_mask).mean())
+    assert 0.06 < tr < 0.14 and 0.02 < va < 0.08 and 0.02 < te < 0.08
+    # disjoint
+    assert not np.any(np.asarray(b.train_mask) & np.asarray(b.val_mask))
+    assert not np.any(np.asarray(b.train_mask) & np.asarray(b.test_mask))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5), st.integers(20, 60), st.integers(30, 120))
+def test_padded_rows_match_build_graph_batch(seed, n, m):
+    """The vectorized padded-layout constructor is bit-identical to the
+    reference ``build_graph_batch`` on the same edge list (neighbors, mask,
+    and norm), including degree truncation."""
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(m, 2))
+    feats = rng.standard_normal((n, 4)).astype(np.float32)
+    labels = rng.integers(0, 3, size=n)
+    for cap in (None, 4):
+        ref = build_graph_batch(feats, edges, labels, 3, max_degree=cap)
+        nbr, mask, norm = _padded_rows_from_edges(n, edges, max_degree=cap)
+        np.testing.assert_array_equal(np.asarray(ref.neighbors), nbr)
+        np.testing.assert_array_equal(np.asarray(ref.mask), mask)
+        np.testing.assert_allclose(np.asarray(ref.norm), norm, rtol=0, atol=0)
+
+
+def test_streamed_plan_construction(ds):
+    plan = streamed_plan(ds, 4, max_degree=16)
+    assert plan.strategy == "streamed"
+    assert plan.chunks == 4 and len(plan.batches) == 4
+    total = sum(mb.graph.num_nodes for mb in plan.batches)
+    assert total == ds.num_nodes
+    assert 0.0 <= plan.edge_cut <= 1.0
+    stacked = plan.stacked()
+    assert stacked.graph.features.shape[0] == 4
+    # node ids tile the graph in order, so chunk c owns a contiguous range
+    first = np.asarray(plan.batches[0].graph.node_ids)
+    assert first[0] == 0 and np.all(np.diff(first) == 1)
+
+
+def test_streamed_plan_chunks_must_fit(ds):
+    with pytest.raises(ValueError):
+        streamed_plan(ds, ds.num_nodes + 1)
+
+
+def test_double_buffered_loader_order_and_device(ds):
+    """The loader yields exactly the source items, in order, each already a
+    committed device array (the overlap is an optimization, never a
+    reordering)."""
+    plan = streamed_plan(ds, 4, max_degree=16)
+    src = [mb.graph.features for mb in plan.batches]
+    out = list(DoubleBufferedLoader(src))
+    assert len(out) == len(src)
+    for got, want in zip(out, src):
+        assert isinstance(got, jax.Array)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert list(DoubleBufferedLoader([])) == []
+    one = list(DoubleBufferedLoader([jnp.ones(3)]))
+    assert len(one) == 1 and float(one[0].sum()) == 3.0
+
+
+def test_streamed_seed_changes_graph(ds):
+    other = open_streamed("powerlaw-64k", num_nodes=N_SMALL, block_size=512,
+                          seed=7)
+    a, _ = ds.chunk_edges(0, 512)
+    b, _ = other.chunk_edges(0, 512)
+    assert _edge_set(a) != _edge_set(b)
