@@ -33,6 +33,15 @@ materialized, stepped on the (data, stage) mesh when the host has enough
 devices (see ``_scale_bench``). The perf gate checks the run-internal
 growth ratio step(n)/step(n_min) and the in-run host-oracle
 ``updates_match`` bit.
+
+``overlap/*`` rows measure the double-buffered wire dataflow
+(``--overlap double-buffer``) against the serialized ppermute-after-work
+baseline on the deepest ring of the matrix, interleaved-stepped with an
+in-run host fill-drain oracle check, plus a ``jax.profiler`` overlap
+report for both modes (``overlap_report.json`` + uploaded traces — see
+``_overlap_bench`` and ``repro.core.overlap_report``). The perf gate's
+overlap rule is platform-conditional; the row carries the tick accounting
+(``num_ticks``, ``wire_latency``) it needs.
 """
 
 from __future__ import annotations
@@ -148,6 +157,13 @@ def run(*, dataset="cora", epochs=30, max_chunks=4, schedules=SCHEDULES,
         )
     )
     rows.extend(_scale_bench(bench, epochs=max(epochs // 2, 8)))
+    rows.extend(
+        _overlap_bench(
+            bench,
+            epochs=max(epochs, 12),
+            json_dir=os.path.dirname(json_path) if json_path else None,
+        )
+    )
     if json_path:
         with open(json_path, "w") as f:
             json.dump(bench, f, indent=2, sort_keys=True)
@@ -450,6 +466,155 @@ def _sparse_bench(bench, *, epochs, chunks=2, dataset="skewed-powerlaw", json_di
     return rows
 
 
+def _overlap_bench(bench, *, epochs, chunks=8, dataset="cora", json_dir=None):
+    """Double-buffered wire ticks vs the serialized baseline on the deepest
+    ring of the matrix (paper GAT, balance (2,1,1,2), 1f1b).
+
+    Both engines run the SAME lowered schedule family; ``double-buffer``
+    retimes it to wire latency 2 so each tick's ppermute pair is posted one
+    tick before its arrivals are consumed (no data dependency pins it to
+    the critical path). The update stays bit-identical dataflow, checked
+    here at oracle tolerance against one host fill-drain step from
+    identical params — in the SAME run the gate times.
+
+    Each row carries the tick accounting the perf gate's
+    platform-conditional rule needs: on runtimes whose traced
+    ``overlap_fraction`` shows real hiding, the gate requires the
+    double-buffered STEP to win outright; on lockstep single-threaded
+    executors (CI's forced-host CPU — fraction ~0, no scheduling can win
+    wall-clock there) it bounds the retimed program's per-TICK cost
+    instead. ``capture_overlap_report`` traces one warm step per mode and
+    the pair of reports lands in ``json_dir/overlap_report.json`` with the
+    raw profiler traces beside it."""
+    from repro.core.overlap_report import capture_overlap_report
+    from repro.core.pipeline import GPipeConfig, make_engine
+    from repro.models.gnn.net import build_paper_gat
+    from repro.train import optimizer as opt_lib
+
+    g = load_dataset(dataset)
+    model = build_paper_gat(g.num_features, g.num_classes)
+    plan = make_plan(g, chunks, strategy="sequential")
+    balance = (2, 1, 1, 2)
+    opt = opt_lib.adam(1e-2)
+    modes = {"serialized": "off", "double-buffer": "double-buffer"}
+
+    # oracle update check, same discipline as _sparse_bench: one step from
+    # identical params through a host fill-drain reference and through each
+    # measured compiled config, in the run the gate times
+    ref = make_engine(model, GPipeConfig(balance=balance, chunks=chunks, engine="host"))
+    params0 = ref.init_params(jax.random.PRNGKey(0))
+    rng0 = jax.random.PRNGKey(1)
+    p_ref, _, _ = ref.train_step(params0, opt.init(params0), plan, rng0, opt)
+
+    pipes, states, times, diffs, stats = {}, {}, {}, {}, {}
+    for name, overlap in modes.items():
+        pipes[name] = make_engine(model, GPipeConfig(
+            balance=balance, chunks=chunks, schedule="1f1b",
+            engine="compiled", overlap=overlap,
+        ))
+        st: dict = {}
+        p1, _, _ = pipes[name].train_step(
+            params0, opt.init(params0), plan, rng0, opt, stats=st
+        )
+        stats[name] = st
+        diffs[name] = max(
+            float(abs(a - b).max()) for a, b in zip(
+                jax.tree_util.tree_leaves(p_ref), jax.tree_util.tree_leaves(p1)
+            )
+        )
+        states[name] = [params0, opt.init(params0), jax.random.PRNGKey(0)]
+        times[name] = []
+
+    # interleaved measurement, median with the warm-up step dropped
+    for _ in range(epochs):
+        for name, pipe in pipes.items():
+            params, state, key = states[name]
+            key, rng = jax.random.split(key)
+            t0 = time.perf_counter()
+            params, state, loss = pipe.train_step(params, state, plan, rng, opt)
+            jax.block_until_ready(loss)
+            times[name].append(time.perf_counter() - t0)
+            states[name] = [params, state, key]
+
+    # trace one warm step per mode; the report pair (and the raw traces) is
+    # the figure's overlap evidence — a fraction of ~0 on forced-host CPU is
+    # itself the documented finding (see repro.core.overlap_report)
+    reports = {}
+    trace_root = os.path.join(json_dir, "overlap_traces") if json_dir else None
+    for name, pipe in pipes.items():
+        params, state, key = states[name]
+        _, rng = jax.random.split(key)
+
+        def one_step(pipe=pipe, params=params, state=state, rng=rng):
+            _, _, loss = pipe.train_step(params, state, plan, rng, opt)
+            jax.block_until_ready(loss)
+
+        tdir = os.path.join(trace_root, name) if trace_root else None
+        if tdir:
+            os.makedirs(tdir, exist_ok=True)
+        reports[name] = capture_overlap_report(one_step, trace_dir=tdir)
+
+    if json_dir:
+        os.makedirs(json_dir, exist_ok=True)
+        with open(os.path.join(json_dir, "overlap_report.json"), "w") as f:
+            json.dump(
+                {"dataset": dataset, "chunks": chunks, "schedule": "1f1b",
+                 "balance": list(balance), "modes": reports},
+                f, indent=2, sort_keys=True,
+            )
+            f.write("\n")
+
+    tol = 5e-4  # engine-cross tolerance (fused host vs scheduled float order)
+    rows = []
+    for name in modes:
+        step_s = statistics.median(times[name][1:])
+        ticks = int(stats[name].get("num_ticks", 0))
+        emit(
+            f"fig3/{dataset}/overlap_{name}_chunks{chunks}",
+            step_s * 1e6,
+            f"max_update_diff={diffs[name]:.2e};num_ticks={ticks};"
+            f"overlap_fraction={reports[name]['overlap_fraction']:.3f}",
+        )
+        bench["rows"][f"overlap/{name}/chunks{chunks}"] = {
+            "step_s": step_s,
+            "num_ticks": ticks,
+            "wire_latency": int(stats[name].get("wire_latency", 0)),
+            "max_update_diff": diffs[name],
+            "updates_match": diffs[name] <= tol,
+            "overlap_fraction": reports[name]["overlap_fraction"],
+        }
+        rows.append((f"overlap/{name}", chunks, step_s, plan.rebuild_seconds))
+    return rows
+
+
+def main_overlap() -> None:
+    """Standalone overlap-cell entry for CI's bench-smoke: run only the
+    ``overlap/*`` pair and write ``BENCH_fig3_overlap.json`` plus
+    ``overlap_report.json`` and the raw profiler traces — uploaded
+    artifacts, not the gate baseline (the perf-gate job regenerates the
+    full table)."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description="fig3 overlap cells only")
+    ap.add_argument("--overlap-cell", action="store_true",
+                    help="marker flag selecting this entry from __main__")
+    ap.add_argument("--chunks", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=8)
+    ap.add_argument("--dataset", default="cora")
+    ap.add_argument("--json-out", default=None)
+    a = ap.parse_args()
+    bench = {"dataset": a.dataset, "epochs": a.epochs, "rows": {}}
+    _overlap_bench(bench, epochs=a.epochs, chunks=a.chunks,
+                   dataset=a.dataset, json_dir=a.json_out)
+    if a.json_out:
+        os.makedirs(a.json_out, exist_ok=True)
+        path = os.path.join(a.json_out, "BENCH_fig3_overlap.json")
+        with open(path, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+
+
 def main_scale() -> None:
     """Standalone streamed-cell entry for CI's bench-smoke: run only the
     ``scale/*`` rows (one or a few mid-size streamed-generator cells) and
@@ -477,4 +642,9 @@ def main_scale() -> None:
 
 
 if __name__ == "__main__":
-    main_scale()
+    import sys
+
+    if "--overlap-cell" in sys.argv:
+        main_overlap()
+    else:
+        main_scale()

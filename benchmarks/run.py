@@ -24,6 +24,10 @@ def main() -> None:
     ap.add_argument("--partition", default="uniform", choices=["uniform", "profiled"],
                     help="fig3: stage balance for the engine×schedule matrix "
                          "(the imbalanced-stack partitioner comparison runs either way)")
+    ap.add_argument("--table1-backends", default="padded,dense,pallas",
+                    help="comma list of aggregation backends for the table1 "
+                         "columns (pallas runs the fused kernel in interpret "
+                         "mode on CPU)")
     args = ap.parse_args()
 
     epochs = 300 if args.full else (15 if args.fast else 60)
@@ -38,7 +42,11 @@ def main() -> None:
         from benchmarks import table1
 
         datasets = ("cora", "citeseer", "pubmed") if args.full else ("cora",)
-        table1.run(datasets=datasets, epochs=epochs)
+        table1.run(
+            datasets=datasets,
+            backends=tuple(args.table1_backends.split(",")),
+            epochs=epochs,
+        )
     if want("table2"):
         from benchmarks import table2
 

@@ -31,6 +31,7 @@ ENGINE_CHOICES = ("host", "compiled")
 SCHEDULE_CHOICES = ("fill_drain", "gpipe", "1f1b", "interleaved", "zb-h1")
 PARTITION_CHOICES = ("uniform", "profiled")
 BACKEND_CHOICES = ("padded", "dense", "pallas")
+OVERLAP_CHOICES = ("off", "double-buffer", "async")
 
 # layer-count split of the 6-layer sequential paper model
 UNIFORM_BALANCES = {2: (3, 3), 3: (2, 2, 2), 4: (2, 1, 1, 2), 6: (1,) * 6}
@@ -75,6 +76,13 @@ def add_pipeline_args(
                          "sharded data_parallel ways, gradients reduced over "
                          "the axis in the canonical chunk order, so the "
                          "update stays bit-identical to 1 replica")
+    ap.add_argument("--overlap", default="off", choices=list(OVERLAP_CHOICES),
+                    help="communication/compute overlap (compiled engine): "
+                         "double-buffer retimes the tick arrays so each "
+                         "ppermute pair is posted one tick before its "
+                         "arrivals are consumed (bit-identical updates); "
+                         "async additionally requests XLA's latency-hiding "
+                         "scheduler (core.overlap_report)")
     return ap
 
 
@@ -92,6 +100,7 @@ class PipelineCLIConfig:
     pipe_devices: int | None = None
     backend: str = "padded"
     data_parallel: int = 1
+    overlap: str = "off"
 
     @classmethod
     def from_args(cls, args) -> "PipelineCLIConfig":
@@ -137,6 +146,7 @@ class PipelineCLIConfig:
             engine=self.engine,
             backend=self.backend,
             data_parallel=self.data_parallel,
+            overlap=self.overlap,
         )
 
     def namespace(self, **extra) -> types.SimpleNamespace:

@@ -68,6 +68,7 @@ from repro.core.schedule import (
     forward_timeline,
     get_schedule,
     lower_timeline,
+    retime_timeline,
 )
 from repro.core.spmd_pipe import (
     spmd_pipeline,
@@ -116,6 +117,15 @@ class GPipeConfig:
     # in the canonical global chunk order, so the update stays bit-identical
     # to a single replica. Requires chunks % data_parallel == 0.
     data_parallel: int = 1
+    # communication/compute overlap (compiled engine): "off" keeps the
+    # serialized ppermute-after-work tick; "double-buffer" retimes the
+    # timeline to wire_latency 2 so each tick posts the NEXT tick's
+    # transfers before its work (parity-alternating wire buffers — see
+    # spmd_pipe's wire-parity rule); "async" is double-buffer plus
+    # best-effort XLA latency-hiding-scheduler flags (core.overlap_report).
+    # Pure retiming: updates stay bit-identical to "off" for every
+    # schedule × placement × data-parallel combo.
+    overlap: str = "off"
 
     @property
     def num_stages(self) -> int:
@@ -222,6 +232,11 @@ class PipelineEngine:
             )
         if config.data_parallel < 1:
             raise ValueError(f"data_parallel must be >= 1, got {config.data_parallel}")
+        if config.overlap not in ("off", "double-buffer", "async"):
+            raise ValueError(
+                f"overlap must be 'off', 'double-buffer' or 'async', got "
+                f"{config.overlap!r}"
+            )
         self.model = model
         self.config = config
         # flipped by the compiled engine's step builder when the 2-D
@@ -348,6 +363,11 @@ class GPipe(PipelineEngine):
             raise ValueError(
                 "data_parallel > 1 needs the compiled engine's (data, stage) "
                 "mesh; the host queue loop has no data axis"
+            )
+        if config.overlap != "off":
+            raise ValueError(
+                "overlap needs the compiled engine's wire buffers; the host "
+                "queue loop has no wires to double-buffer"
             )
         self._fwd_fns = [self._make_fwd(s) for s in range(config.num_stages)]
         self._bwd_fns = [self._make_bwd(s) for s in range(config.num_stages)]
@@ -717,10 +737,13 @@ class CompiledGNNPipeline(PipelineEngine):
         # ring routes through it instead of the fused axis_index scan; the
         # same goes for data parallelism, whose chunk sharding and gathered
         # gradient reduction live in the scheduled executor only
+        # overlap also routes through the scheduled executor: the fused scan
+        # has no retimed index arrays to double-buffer against
         return (
             self.config.schedule in ("fill_drain", "gpipe")
             and self._identity_ring
             and self.config.data_parallel == 1
+            and self.config.overlap == "off"
         )
 
     def _mesh_devices(self, num_devices: int):
@@ -933,18 +956,27 @@ class CompiledGNNPipeline(PipelineEngine):
 
         return work_fn
 
-    def _lower_for(self, chunks: int):
+    def _lower_for(self, chunks: int, skip_chunks: tuple = ()):
         """Lower the configured schedule's timeline for ``chunks`` chunks
         (placement re-deviced; the lowering's ring check rejects anything
-        the executors could not route)."""
+        the executors could not route). Under ``config.overlap != "off"``
+        the timeline is first retimed to wire latency 2 so the lowering can
+        emit the double-buffered (send, compute) index arrays;
+        ``skip_chunks`` drops loss-free chunks and their dead ticks."""
         S = self.config.num_stages
         timeline = self.schedule.timeline(S, chunks)  # raises on bad (S, C)
         if self.placement is not None:
             timeline = self.placement.apply(timeline)
-        return lower_timeline(timeline, S, chunks)
+        latency = 1 if self.config.overlap == "off" else 2
+        if latency != 1:
+            timeline = retime_timeline(timeline, S, chunks, wire_latency=latency)
+        return lower_timeline(
+            timeline, S, chunks, wire_latency=latency, skip_chunks=skip_chunks
+        )
 
     def _build_step_scheduled(
-        self, widths: list[int], chunks: int, optimizer: opt_lib.Optimizer
+        self, widths: list[int], chunks: int, optimizer: opt_lib.Optimizer,
+        skip_chunks: tuple = (),
     ):
         """One jitted train step executing the configured 1F1B/interleaved
         timeline: shard_map over the schedule's device count when the host
@@ -971,7 +1003,10 @@ class CompiledGNNPipeline(PipelineEngine):
                 f"chunks {chunks} must split evenly across data_parallel={dp} "
                 f"replicas"
             )
-        lowered = self._lower_for(chunks // dp if dp > 1 else chunks)
+        lowered = self._lower_for(
+            chunks // dp if dp > 1 else chunks,
+            skip_chunks if dp == 1 else (),
+        )
         D = lowered.num_devices
         dp_active = dp > 1 and jax.device_count() >= dp * D
         if dp > 1 and not dp_active:
@@ -1178,10 +1213,21 @@ class CompiledGNNPipeline(PipelineEngine):
         if self._widths is None:
             chunk0 = jax.tree_util.tree_map(lambda a: a[0], stacked.graph)
             self._widths = activation_widths(self.model, params, chunk0)
+        skip: tuple = ()
+        if not self._fill_drain:
+            loss_mask = stacked.graph.train_mask & stacked.core_mask
+            if self.config.data_parallel == 1:
+                # chunks with no loss rows (ragged plans pad with empty
+                # microbatches) contribute exactly-zero gradients and loss —
+                # drop them so the lowering can eliminate their dead ticks.
+                # dp > 1 keeps the full grid: one SPMD program cannot carry
+                # per-replica tick counts.
+                live = np.asarray(loss_mask.any(axis=tuple(range(1, loss_mask.ndim))))
+                skip = tuple(int(c) for c in np.flatnonzero(~live))
         # the cache entry retains the optimizer: an id() key alone could be
         # reused by a new optimizer after the old one is garbage-collected,
         # silently serving a step jitted around stale hyperparameters
-        key = (stacked.chunks, stacked.n_pad, stacked.max_deg, id(optimizer))
+        key = (stacked.chunks, stacked.n_pad, stacked.max_deg, id(optimizer), skip)
         entry = self._steps.get(key)
         if entry is not None and entry[0] is optimizer:
             step = entry[1]
@@ -1189,12 +1235,12 @@ class CompiledGNNPipeline(PipelineEngine):
             step = self._build_step(self._widths, optimizer)
             self._steps[key] = (optimizer, step)
         else:
-            step = self._build_step_scheduled(self._widths, stacked.chunks, optimizer)
+            step = self._build_step_scheduled(
+                self._widths, stacked.chunks, optimizer, skip
+            )
             self._steps[key] = (optimizer, step)
         if self._fill_drain:
             travel, loss_mask = self._travel_inputs(stacked)
-        else:
-            loss_mask = stacked.graph.train_mask & stacked.core_mask
         if stats is not None:
             stats.update(self.describe())
             if self._fill_drain:
@@ -1208,6 +1254,8 @@ class CompiledGNNPipeline(PipelineEngine):
                 stats["measured_peak_live_activations"] = lowered.peak_live_stash
                 stats["stash_slots_per_device"] = lowered.n_fslots
                 stats["w_slots_per_device"] = lowered.n_wslots
+                stats["num_ticks"] = lowered.num_ticks
+                stats["wire_latency"] = lowered.wire_latency
         if self._fill_drain:
             return step(
                 params, opt_state, travel, graph, stacked.graph.labels,

@@ -66,6 +66,23 @@ executors' stash arrays are sized by them, never by S*C. Every slot array
 reserves index ``n_*slots`` as the sacrificial slot: idle ticks read/write
 it so the scan body stays branch-free. See ``LoweredTimeline`` for the
 authoritative field-by-field statement.
+
+Wire parity (communication/compute overlap): ``wire_latency`` is the number
+of ticks between a value's producing tick and the tick its arrival is
+banked. Latency 1 is the serialized executor — the ``ppermute`` for tick
+t's output issues after tick t's work, and the value is banked at t+1.
+Latency 2 is the DOUBLE-BUFFERED executor: each direction holds two wire
+buffers alternating by tick parity — the value produced at tick t sits in
+the *pending* buffer through tick t+1 (its ``ppermute`` is issued at the
+top of tick t+1, BEFORE t+1's work, so the collective has a full tick of
+compute to hide behind) and is banked from the *wire* buffer at t+2.
+``retime_timeline`` stretches any validated timeline so every wire edge
+has >= ``wire_latency`` ticks of slack; ``lower_timeline(...,
+wire_latency=2)`` then emits arrival indices one tick ahead of consumption
+and rejects timelines whose wire edges are too tight. All-idle ticks
+(ragged plans lowered with ``skip_chunks`` produce them) are deleted from
+the emitted arrays — the remap keeps every producer→arrival distance
+exactly ``wire_latency``, so dead ticks never pay their two ppermutes.
 """
 
 from __future__ import annotations
@@ -361,6 +378,14 @@ class LoweredTimeline:
     inputs summed across devices (the compiled analogue of the host engine's
     measured ``len(saved)`` peak, minus stage-0 inputs which are never
     stashed — they are read from the replicated feature table by chunk id).
+
+    ``wire_latency`` selects the executor's wire dataflow: 1 — a value put
+    on the wire at tick t is banked at t+1 (the serialized ppermute-after-
+    work executor); 2 — banked at t+2 through the parity-alternating double
+    buffer (the ppermute for tick t's arrivals is issued before tick t-1's
+    work, off the critical path). The index arrays already encode the
+    latency (arrivals land ``wire_latency`` ticks after production), so the
+    executors only branch on this field to pick the matching carry shape.
     """
 
     num_stages: int
@@ -380,6 +405,7 @@ class LoweredTimeline:
     n_bslots: int
     n_wslots: int
     peak_live_stash: int
+    wire_latency: int = 1
 
 
 def _alloc_slots(entries):
@@ -406,12 +432,63 @@ def _alloc_slots(entries):
     return slot_of, n_slots
 
 
+def retime_timeline(
+    items: list[WorkItem],
+    num_stages: int,
+    num_chunks: int,
+    *,
+    wire_latency: int = 2,
+) -> list[WorkItem]:
+    """Stretch a validated timeline so every wire edge has >= ``wire_latency``
+    ticks between its producing and consuming items — the earliest-start
+    retiming that makes a latency-1 schedule double-bufferable.
+
+    A single longest-path pass over the items in canonical order (a valid
+    topological order: every dependency's original tick is strictly smaller,
+    and within a tick forwards precede backwards). Constraints:
+
+      * per-device sequencing — each device's items keep their original
+        relative order, one tick apart at minimum (this also covers the
+        same-device dependencies: loss after the last stage's fwd, W after
+        its matching B);
+      * wire edges — fwd(s, c) at least ``wire_latency`` ticks after
+        fwd(s-1, c), and the input-grad item of (s, c) at least
+        ``wire_latency`` ticks after that of (s+1, c).
+
+    Per-device order preservation keeps the arrival-collision property of
+    the input timeline (one producer per direction per device per tick);
+    the fill phase inflates by ~(wire_latency - 1)(S - 1) ticks while steady
+    -state 1F1B/zb-h1 ticks mostly already carry the slack."""
+    S, C = num_stages, num_chunks
+    validate_timeline(items, S, C)
+    L = wire_latency
+    new_tick: dict[tuple[int, int, str], int] = {}
+    last_on_dev: dict[int, int] = {}
+
+    def b_key(s, c):
+        return (s, c, "bwd") if (s, c, "bwd") in new_tick else (s, c, "bwd_b")
+
+    out: list[WorkItem] = []
+    for it in sorted(items, key=_sort_key):
+        earliest = last_on_dev.get(it.device, -1) + 1
+        if it.phase == "fwd" and it.stage > 0:
+            earliest = max(earliest, new_tick[(it.stage - 1, it.chunk, "fwd")] + L)
+        elif it.phase in ("bwd", "bwd_b") and it.stage < S - 1:
+            earliest = max(earliest, new_tick[b_key(it.stage + 1, it.chunk)] + L)
+        new_tick[(it.stage, it.chunk, it.phase)] = earliest
+        last_on_dev[it.device] = earliest
+        out.append(dataclasses.replace(it, tick=earliest))
+    return sorted(out, key=_sort_key)
+
+
 def lower_timeline(
     items: list[WorkItem],
     num_stages: int,
     num_chunks: int,
     *,
     forward_only: bool = False,
+    wire_latency: int = 1,
+    skip_chunks: tuple[int, ...] = (),
 ) -> LoweredTimeline:
     """Lower a validated timeline to the per-tick index arrays of
     ``LoweredTimeline``.
@@ -436,12 +513,24 @@ def lower_timeline(
     only, validated by ``validate_forward_timeline``): each banked stage
     input is released by its own forward, so the stash collapses to the
     wire-slack window (one slot per device for fill-drain forwards).
+
+    ``wire_latency`` sets the production→arrival distance of every wire
+    value (see the module docstring's wire-parity rule); a timeline whose
+    wire edges are tighter than the latency raises ``ValueError`` pointing
+    at ``retime_timeline``. ``skip_chunks`` drops the named chunks' items
+    after validation — the lever for ragged plans whose empty chunks
+    contribute exactly-zero gradients — and the all-idle ticks that leaves
+    behind (plus any the input timeline already had) are deleted from the
+    emitted arrays by a monotone tick remap that preserves every
+    producer→arrival distance.
     """
     S, C = num_stages, num_chunks
     if forward_only:
         validate_forward_timeline(items, S, C)
     else:
         validate_timeline(items, S, C)
+    if wire_latency < 1:
+        raise ValueError(f"wire_latency must be >= 1, got {wire_latency}")
 
     dev_of: dict[int, int] = {}
     for it in items:
@@ -456,6 +545,17 @@ def lower_timeline(
                 f"after stage {s} on device {dev_of[s]})"
             )
 
+    skip = set(skip_chunks)
+    if skip - set(range(C)):
+        raise ValueError(
+            f"skip_chunks {sorted(skip)} outside the chunk range 0..{C - 1}"
+        )
+    if skip:
+        items = [it for it in items if it.chunk not in skip]
+        if not items:
+            raise ValueError("skip_chunks removed every item in the timeline")
+    live_chunks = [c for c in range(C) if c not in skip]
+
     t_f: dict[tuple[int, int], int] = {}
     t_b: dict[tuple[int, int], int] = {}  # input-grad tick: fused bwd or bwd_b
     t_w: dict[tuple[int, int], int] = {}
@@ -467,28 +567,60 @@ def lower_timeline(
             t_w[key] = it.tick
         else:  # "bwd" | "bwd_b"
             t_b[key] = it.tick
-    T = max(it.tick for it in items) + 1
 
     # forward stash: stage s >= 1's input for chunk c is banked on arrival
-    # (one tick after fwd(s-1, c) put it on the wire) and freed once the
-    # input-grad item — fused bwd or bwd_b — has re-materialized from it
-    # (forward-only: freed by its own fwd read)
+    # (wire_latency ticks after fwd(s-1, c) put it on the wire) and freed
+    # once the input-grad item — fused bwd or bwd_b — has re-materialized
+    # from it (forward-only: freed by its own fwd read)
     f_entries: dict[int, list] = {d: [] for d in range(D)}
     b_entries: dict[int, list] = {d: [] for d in range(D)}
     w_entries: dict[int, list] = {d: [] for d in range(D)}
-    for c in range(C):
+    for c in live_chunks:
         for s in range(1, S):
             release = t_f[(s, c)] if forward_only else t_b[(s, c)]
-            f_entries[dev_of[s]].append((t_f[(s - 1, c)] + 1, release, (s, c)))
+            arrival = t_f[(s - 1, c)] + wire_latency
+            if arrival > t_f[(s, c)]:
+                raise ValueError(
+                    f"fwd({s}, {c}) at tick {t_f[(s, c)]} reads a wire value "
+                    f"arriving at tick {arrival} (wire_latency="
+                    f"{wire_latency}); retime the timeline first "
+                    f"(retime_timeline)"
+                )
+            f_entries[dev_of[s]].append((arrival, release, (s, c)))
         if not forward_only:
             for s in range(S - 1):
                 # cotangent of stage s's output: produced by the input-grad
                 # item of (s+1, c), read (and freed) by that of (s, c)
-                b_entries[dev_of[s]].append((t_b[(s + 1, c)] + 1, t_b[(s, c)], (s, c)))
+                arrival = t_b[(s + 1, c)] + wire_latency
+                if arrival > t_b[(s, c)]:
+                    raise ValueError(
+                        f"bwd({s}, {c}) at tick {t_b[(s, c)]} reads a wire "
+                        f"value arriving at tick {arrival} (wire_latency="
+                        f"{wire_latency}); retime the timeline first "
+                        f"(retime_timeline)"
+                    )
+                b_entries[dev_of[s]].append((arrival, t_b[(s, c)], (s, c)))
             for s in range(S):
                 if (s, c) in t_w:
                     # residual written at the B tick, consumed at the W tick
                     w_entries[dev_of[s]].append((t_b[(s, c)], t_w[(s, c)], (s, c)))
+
+    # dead-tick elimination: keep a tick iff some device works it, a wire
+    # value is banked at it, or a wire value is in flight across it (for
+    # latency L, the L - 1 ticks between production and arrival — deleting
+    # one would break the executor's fixed production→arrival distance).
+    # The monotone remap therefore keeps every such distance exactly L.
+    keep = {it.tick for it in items}
+    for entries in (f_entries, b_entries):
+        for d in range(D):
+            for arrival, _, _ in entries[d]:
+                keep.update(range(arrival - wire_latency + 1, arrival + 1))
+    remap = {old: new for new, old in enumerate(sorted(keep))}
+    T = len(remap)
+    items = [dataclasses.replace(it, tick=remap[it.tick]) for it in items]
+    for store in (f_entries, b_entries, w_entries):
+        for d in range(D):
+            store[d] = [(remap[a], remap[r], k) for a, r, k in store[d]]
 
     f_slot: dict[tuple[int, int], int] = {}
     b_slot: dict[tuple[int, int], int] = {}
@@ -566,6 +698,7 @@ def lower_timeline(
         n_bslots=n_bslots,
         n_wslots=n_wslots,
         peak_live_stash=peak,
+        wire_latency=wire_latency,
     )
 
 

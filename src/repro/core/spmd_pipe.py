@@ -53,6 +53,20 @@ every device, in this order —
   3. accumulate grads into the per-(layer, chunk) slot of ``gbuf`` (slot C
      is sacrificial), then ``ppermute`` both wires one ring hop.
 
+Wire-parity rule (``lowered.wire_latency``): with latency 1 (serialized,
+the default) each tick's outputs ride the single wire pair issued AFTER the
+work and are banked at tick t+1 — the collective sits on the critical path
+of every tick. With latency 2 (double-buffered; timelines must be retimed
+by ``repro.core.schedule.retime_timeline`` first) each direction holds TWO
+buffers of alternating parity — ``wire`` (in flight since tick t-1, banked
+now) and ``pending`` (this device's previous outputs, posted onto the ring
+BEFORE the tick's work runs). A tick-t output is pending at t+1 and banked
+at t+2, so consecutive ticks' transfers occupy opposite buffers and the
+``ppermute`` for tick t+1's arrivals overlaps tick t's compute. The lanes
+substrate mirrors the same two-buffer dataflow with tuple rotation. This is
+pure retiming: banked values, stash traffic and gradient order are
+unchanged, so updates stay bit-identical to the serialized path.
+
 Stash sizes are the free-list results ``n_fslots``/``n_bslots``/
 ``n_wslots`` — the schedule's true live windows, NOT S*C — each +1 for the
 sacrificial slot. After the scan, per-chunk gradients reduce in canonical
@@ -337,12 +351,26 @@ def spmd_pipeline_scheduled(
     gather + ordered sum (and the stage psum after it) only ever add zeros
     to the single real addend — the data axis changes WHERE chunks run,
     never the float associativity of the update.
+
+    ``lowered.wire_latency == 2`` selects the DOUBLE-BUFFERED wire dataflow
+    (the module docstring's wire-parity rule): each direction carries a
+    (wire, pending) buffer pair — the tick banks ``wire`` (outputs of tick
+    t-2), issues the ``ppermute`` of ``pending`` (outputs of tick t-1)
+    BEFORE running ``work_fn``, and parks its own outputs as the next
+    pending. Nothing downstream of the early ppermute is read by the tick's
+    work, so the collective has the whole tick of compute to hide behind;
+    the dataflow is a pure retiming — the banked values, stash traffic and
+    gradient accumulation order are identical, so updates stay bit-identical
+    to the serialized latency-1 executor.
     """
     from repro.core.schedule import PHASE_BWD, PHASE_BWD_W
     from repro.core.vma import match_vma
 
     C = lowered.num_chunks
     T, D = lowered.num_ticks, lowered.num_devices
+    if lowered.wire_latency not in (1, 2):
+        raise ValueError(f"unsupported wire_latency {lowered.wire_latency}")
+    double = lowered.wire_latency == 2
     d = lax.axis_index(stage_axis)
     tree_map = jax.tree_util.tree_map
 
@@ -368,10 +396,17 @@ def spmd_pipeline_scheduled(
     bwd_perm = [(i, (i - 1) % D) for i in range(D)]
 
     def tick_body(carry, t):
-        wire_f, wire_b, fstash, bstash, wstash, gbuf, loss, count = carry
+        wires, fstash, bstash, wstash, gbuf, loss, count = carry
+        wire_f, wire_b = wires[0], wires[1]
         # bank arrivals BEFORE the work reads (same-tick deliver-then-consume)
         fstash = lax.dynamic_update_index_in_dim(fstash, wire_f, pick("in_fslot", t), 0)
         bstash = lax.dynamic_update_index_in_dim(bstash, wire_b, pick("in_bslot", t), 0)
+        if double:
+            # post tick t+1's arrivals (tick t-1's outputs, parked in the
+            # pending buffers) before this tick's work: no value below reads
+            # next_f/next_b, so XLA may run the collective under the compute
+            next_f = lax.ppermute(wires[2], stage_axis, perm=fwd_perm)
+            next_b = lax.ppermute(wires[3], stage_axis, perm=bwd_perm)
         h_in = lax.dynamic_index_in_dim(fstash, pick("work_fslot", t), 0, keepdims=False)
         ct_in = lax.dynamic_index_in_dim(bstash, pick("work_bslot", t), 0, keepdims=False)
         # fused-backward schedules allocate no residual slots; skip the
@@ -406,19 +441,24 @@ def spmd_pipeline_scheduled(
             lambda b, acc, g: lax.dynamic_update_index_in_dim(b, acc + g, gc, 0),
             gbuf, gslot, grads,
         )
-        wire_f = lax.ppermute(y, stage_axis, perm=fwd_perm)
-        wire_b = lax.ppermute(d_h, stage_axis, perm=bwd_perm)
+        if double:
+            wires = (next_f, next_b, y, d_h)
+        else:
+            wires = (
+                lax.ppermute(y, stage_axis, perm=fwd_perm),
+                lax.ppermute(d_h, stage_axis, perm=bwd_perm),
+            )
         return (
-            wire_f, wire_b, fstash, bstash, wstash, gbuf,
+            wires, fstash, bstash, wstash, gbuf,
             loss + loss_sum, count + cnt,
         ), None
 
     carry0 = (
-        zero_wire, zero_wire, fstash0, bstash0, wstash0, gbuf0,
+        (zero_wire,) * (4 if double else 2), fstash0, bstash0, wstash0, gbuf0,
         jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
     )
     carry0 = match_vma(carry0, grads_like, vma_refs, extra=(stage_axis,))
-    (_, _, _, _, _, gbuf, loss, count), _ = lax.scan(tick_body, carry0, jnp.arange(T))
+    (_, _, _, _, gbuf, loss, count), _ = lax.scan(tick_body, carry0, jnp.arange(T))
 
     # canonical reduction: per layer, chunks in DESCENDING order — the host
     # engine's fill-drain drain order — so floats accumulate identically no
@@ -466,11 +506,21 @@ def spmd_pipeline_scheduled_lanes(
     to the shard_map substrate: same banking, same canonical descending-chunk
     gradient reduction — per (layer, chunk) slot exactly one lane ever
     contributes, so the shared gradient buffer accumulates the same floats
-    the psum would."""
+    the psum would.
+
+    ``lowered.wire_latency == 2`` mirrors the double-buffered wire dataflow
+    (module docstring wire-parity rule) with tuple rotation: the tick banks
+    the in-flight ``wire`` tuples, rotates the ``pending`` tuples into the
+    next wires, and parks its own lane outputs as pending — outputs reach
+    the neighbour lane's stash exactly two ticks after production, matching
+    the retimed index arrays and the shard_map substrate bit-for-bit."""
     from repro.core.schedule import PHASE_BWD, PHASE_BWD_W
 
     C = lowered.num_chunks
     T, D = lowered.num_ticks, lowered.num_devices
+    if lowered.wire_latency not in (1, 2):
+        raise ValueError(f"unsupported wire_latency {lowered.wire_latency}")
+    double = lowered.wire_latency == 2
     tree_map = jax.tree_util.tree_map
 
     idx = {
@@ -508,7 +558,8 @@ def spmd_pipeline_scheduled_lanes(
     gbuf0 = tree_map(lambda p: jnp.zeros((C + 1,) + p.shape, p.dtype), grads_like)
 
     def tick_body(carry, t):
-        wire_f, wire_b, fstash, bstash, wstash, gbuf, loss, count = carry
+        wires, fstash, bstash, wstash, gbuf, loss, count = carry
+        wire_f, wire_b = wires[0], wires[1]
         fstash, bstash, wstash = list(fstash), list(bstash), list(wstash)
         ys, dhs = [], []
         for d in range(D):  # static: one single-branch dispatch per lane
@@ -557,19 +608,31 @@ def spmd_pipeline_scheduled_lanes(
             loss, count = loss + loss_sum, count + cnt
             ys.append(y)
             dhs.append(d_h)
-        # the ring hops: lane d's activation to lane d+1, cotangent to d-1
-        wire_f = tuple(ys[(d - 1) % D] for d in range(D))
-        wire_b = tuple(dhs[(d + 1) % D] for d in range(D))
+        if double:
+            # rotate last tick's parked outputs into the in-flight wires and
+            # park this tick's outputs: two-tick producer→stash delay, the
+            # lane image of the early-posted ppermute pair
+            wires = (
+                tuple(wires[2][(d - 1) % D] for d in range(D)),
+                tuple(wires[3][(d + 1) % D] for d in range(D)),
+                tuple(ys), tuple(dhs),
+            )
+        else:
+            # the ring hops: lane d's activation to lane d+1, cotangent to d-1
+            wires = (
+                tuple(ys[(d - 1) % D] for d in range(D)),
+                tuple(dhs[(d + 1) % D] for d in range(D)),
+            )
         return (
-            wire_f, wire_b, tuple(fstash), tuple(bstash), tuple(wstash),
+            wires, tuple(fstash), tuple(bstash), tuple(wstash),
             gbuf, loss, count,
         ), None
 
     carry0 = (
-        wires0, wires0, fstash0, bstash0, wstash0, gbuf0,
+        (wires0,) * (4 if double else 2), fstash0, bstash0, wstash0, gbuf0,
         jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
     )
-    (_, _, _, _, _, gbuf, loss, count), _ = lax.scan(tick_body, carry0, jnp.arange(T))
+    (_, _, _, _, gbuf, loss, count), _ = lax.scan(tick_body, carry0, jnp.arange(T))
     grads = tree_map(lambda b: jnp.zeros(b.shape[1:], b.dtype), gbuf)
     for c in reversed(range(C)):  # canonical: the fill-drain drain order
         grads = tree_map(lambda g, b, c=c: g + b[c], grads, gbuf)

@@ -314,6 +314,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
+    if getattr(args, "overlap", "off") == "async":
+        # must land in XLA_FLAGS before the first backend touch — main() is
+        # the one place that runs ahead of any jax.devices() call
+        from repro.core.overlap_report import apply_async_overlap_flags
+
+        apply_async_overlap_flags()
     if args.mode == "gnn":
         run_gnn(args)
     else:

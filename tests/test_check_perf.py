@@ -294,6 +294,98 @@ def test_scale_gate_zero_anchor_fails():
     ), failures
 
 
+# ------------------------------------------------------------ overlap gate --
+
+
+def _overlap_rows(ser=0.140, db=0.158, *, ser_ticks=22, db_ticks=38,
+                  fraction=0.0, ser_match=True, db_match=True):
+    rows = _base_rows()
+    rows["overlap/serialized/chunks8"] = {
+        "step_s": ser, "num_ticks": ser_ticks, "wire_latency": 1,
+        "max_update_diff": 0.0, "updates_match": ser_match,
+        "overlap_fraction": 0.0,
+    }
+    rows["overlap/double-buffer/chunks8"] = {
+        "step_s": db, "num_ticks": db_ticks, "wire_latency": 2,
+        "max_update_diff": 0.0, "updates_match": db_match,
+        "overlap_fraction": fraction,
+    }
+    return rows
+
+
+def test_overlap_gate_passes_on_identical_tables():
+    t = _table(**_overlap_rows())
+    assert check(t, t, threshold=1.2, absolute=False) == []
+
+
+def test_overlap_gate_tick_bound_when_no_traced_overlap():
+    """fraction ~0 (lockstep CPU): the rule is per-tick — 0.158/38 beats
+    0.140/22 even though the raw step is slower; a double-buffered tick
+    that got DEARER than the serialized tick fails by name."""
+    ok = _table(**_overlap_rows(ser=0.140, db=0.158))
+    assert check(ok, ok, threshold=1.2, absolute=False) == []
+    # 0.30/38 per tick > 0.140/22 per tick
+    bad = _table(**_overlap_rows(ser=0.140, db=0.30))
+    failures = check(bad, bad, threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("overlap:") and "per-tick" in f for f in failures
+    ), failures
+
+
+def test_overlap_gate_strict_step_bound_when_overlap_traced():
+    """fraction > 0.05 (the runtime demonstrably hid collectives): the
+    double-buffered STEP must beat/match serialized within threshold —
+    tick inflation is no excuse once overlap is real."""
+    ok = _table(**_overlap_rows(ser=0.140, db=0.130, fraction=0.4))
+    assert check(ok, ok, threshold=1.1, absolute=False) == []
+    bad = _table(**_overlap_rows(ser=0.140, db=0.158, fraction=0.4))
+    failures = check(bad, bad, threshold=1.1, absolute=False)
+    assert any(
+        f.startswith("overlap:") and "despite traced overlap_fraction" in f
+        for f in failures
+    ), failures
+
+
+def test_overlap_gate_requires_updates_match_on_both_rows():
+    good = _table(**_overlap_rows())
+    for kw in ({"ser_match": False}, {"db_match": False}):
+        bad = _table(**_overlap_rows(**kw))
+        failures = check(good, bad, threshold=1.2, absolute=False)
+        assert any(
+            f.startswith("overlap:") and "diverged" in f for f in failures
+        ), (kw, failures)
+
+
+def test_overlap_gate_coverage_and_partner_fail_by_name():
+    base = _table(**_overlap_rows())
+    cur = dict(_overlap_rows())
+    del cur["overlap/serialized/chunks8"]
+    failures = check(base, _table(**cur), threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("coverage:") and "overlap/serialized/chunks8" in f
+        for f in failures
+    ), failures
+    assert any(
+        f.startswith("overlap:") and "no serialized row" in f for f in failures
+    ), failures
+
+
+def test_overlap_gate_missing_accounting_fails_by_name():
+    """A row without overlap_fraction (no profiler report) or without tick
+    counts cannot be gated — named failure, never a silent pass."""
+    rows = _overlap_rows()
+    del rows["overlap/double-buffer/chunks8"]["overlap_fraction"]
+    failures = check(_table(**rows), _table(**rows), threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("overlap:") and "overlap_fraction" in f for f in failures
+    ), failures
+    rows = _overlap_rows(db_ticks=0)
+    failures = check(_table(**rows), _table(**rows), threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("overlap:") and "tick accounting" in f for f in failures
+    ), failures
+
+
 # ----------------------------------------------------------- kernels gate --
 
 

@@ -659,6 +659,126 @@ def test_empty_chunk_trains_identically_on_both_engines(setup, schedule):
     _params_close(ph, pc, atol=5e-4)
 
 
+# ---------------------------------------- communication/compute overlap --
+
+
+@pytest.mark.parametrize("schedule,rotation,dp", [
+    ("fill_drain", 1, 1),  # rotated ring: the serialized side must ALSO run
+    ("1f1b", None, 1),     # the scheduled executor (the fused fill-drain
+    ("zb-h1", None, 1),    # scan fuses differently at the float level)
+    ("1f1b", None, 2),
+])
+def test_double_buffer_bit_identical_to_serialized(schedule, rotation, dp):
+    """The tentpole's correctness property: retiming the wires to latency 2
+    (ppermute pair posted one tick before its arrivals are consumed) is pure
+    dataflow retiming — params after each step are BIT-identical to the
+    serialized latency-1 executor, on every schedule and with the data axis
+    active. On 1 device this exercises the lane substrate's pend-tuple
+    rotation; under CI's 4 forced devices the real shard_map ring."""
+    import numpy as np
+
+    from repro.core.schedule import Placement
+
+    plan, m = _dp_fixture(4)
+    opt = opt_lib.adam(1e-2)
+    params = m.init_params(jax.random.PRNGKey(0))
+    placement = None if rotation is None else Placement.ring(2, rotation=rotation)
+    engines = [
+        make_engine(m, GPipeConfig(engine="compiled", balance=(2, 2), chunks=4,
+                                   schedule=schedule, placement=placement,
+                                   data_parallel=dp, overlap=overlap))
+        for overlap in ("off", "double-buffer")
+    ]
+    ps = [params, params]
+    os_ = [opt.init(params), opt.init(params)]
+    key = jax.random.PRNGKey(42)
+    stats = [{}, {}]
+    for _ in range(2):
+        key, rng = jax.random.split(key)
+        for i, eng in enumerate(engines):
+            ps[i], os_[i], _ = eng.train_step(
+                ps[i], os_[i], plan, rng, opt, stats=stats[i]
+            )
+    assert stats[0]["wire_latency"] == 1
+    assert stats[1]["wire_latency"] == 2
+    assert stats[1]["num_ticks"] > stats[0]["num_ticks"]  # retime adds ticks
+    for a, b in zip(jax.tree_util.tree_leaves(ps[0]), jax.tree_util.tree_leaves(ps[1])):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            schedule, dp, float(jnp.max(jnp.abs(a - b))))
+
+
+def test_double_buffer_matches_host_oracle(setup):
+    """Engine-cross check on the paper model: the double-buffered 1f1b
+    update agrees with the host fill-drain oracle at the standard engine
+    tolerance (bit-identity is vs the serialized executor above)."""
+    g, m, params = setup
+    opt = opt_lib.adam(1e-2)
+    plan = make_plan(g, 4, strategy="halo", halo_hops=2)
+    host = make_engine(m, GPipeConfig(engine="host", balance=(2, 1, 1, 2), chunks=4))
+    comp = make_engine(m, GPipeConfig(engine="compiled",
+        balance=(2, 1, 1, 2), chunks=4, schedule="1f1b", overlap="double-buffer",
+    ))
+    ph = pc = params
+    oh = oc = opt.init(params)
+    key = jax.random.PRNGKey(42)
+    for _ in range(2):
+        key, rng = jax.random.split(key)
+        ph, oh, lh = host.train_step(ph, oh, plan, rng, opt)
+        pc, oc, lc = comp.train_step(pc, oc, plan, rng, opt)
+        assert abs(float(lh) - float(lc)) < 1e-4, (float(lh), float(lc))
+    _params_close(ph, pc, atol=5e-4)
+
+
+def test_empty_chunk_skips_its_ticks(setup):
+    """Dead-tick elimination at the engine level: the ragged karate plan
+    with a trailing EMPTY chunk runs in exactly the tick count of the clean
+    3-chunk plan (the empty chunk's ticks are skipped, not pipelined), and
+    the double-buffered executor composes with the skip — bit-identical
+    params to the serialized run on the same ragged plan."""
+    import numpy as np
+
+    g, m, params = setup
+    opt = opt_lib.adam(1e-2)
+    ragged = _plan_with_empty_chunk(g, chunks=3)  # C = 4 incl. empty
+    clean = make_plan(g, 3, strategy="halo", halo_hops=2)
+    engines = {
+        name: make_engine(m, GPipeConfig(engine="compiled",
+            balance=(2, 1, 1, 2), chunks=4, schedule="1f1b", overlap=name))
+        for name in ("off", "double-buffer")
+    }
+    clean3 = make_engine(m, GPipeConfig(engine="compiled",
+        balance=(2, 1, 1, 2), chunks=3, schedule="1f1b"))
+    st = {name: {} for name in engines}
+    st["clean"] = {}
+    ps = {}
+    for name, eng in engines.items():
+        p, o, loss = eng.train_step(
+            params, opt.init(params), ragged, jax.random.PRNGKey(7), opt,
+            stats=st[name],
+        )
+        assert jnp.isfinite(loss)
+        ps[name] = p
+    clean3.train_step(params, opt.init(params), clean, jax.random.PRNGKey(7),
+                      opt, stats=st["clean"])
+    assert st["off"]["num_ticks"] == st["clean"]["num_ticks"]
+    for a, b in zip(jax.tree_util.tree_leaves(ps["off"]),
+                    jax.tree_util.tree_leaves(ps["double-buffer"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            float(jnp.max(jnp.abs(a - b))))
+
+
+def test_overlap_validation(setup):
+    """The host queue loop has no wires to double-buffer — overlap modes are
+    compiled-engine only — and an unknown mode is a config error."""
+    g, m, params = setup
+    with pytest.raises(ValueError, match="host"):
+        make_engine(m, GPipeConfig(engine="host", balance=(2, 1, 1, 2),
+                                   chunks=4, overlap="double-buffer"))
+    with pytest.raises(ValueError, match="overlap"):
+        make_engine(m, GPipeConfig(engine="compiled", balance=(2, 1, 1, 2),
+                                   chunks=4, overlap="eager"))
+
+
 # ------------------------------------------- pytree-generalized pipeline --
 
 
@@ -776,6 +896,62 @@ def test_compiled_engine_matches_host_multidevice():
     for schedule in ("fill_drain", "1f1b", "interleaved", "zb-h1"):
         assert f"MD_ENGINE_OK {schedule}" in out
     assert "MD_EVAL_OK" in out
+
+
+@pytest.mark.slow
+def test_double_buffer_bit_identical_multidevice():
+    """The tentpole property on the real 4-device shard_map ring: the
+    double-buffered executor (ppermute pair for tick t+1 issued before
+    tick t's work) produces BIT-identical params to the serialized latency-1
+    executor for every schedule family — rotated fill-drain (so both sides
+    run the scheduled path), 1f1b, zb-h1, and 1f1b on the 2x2 (data, stage)
+    mesh."""
+    out = _run("""
+    import jax, numpy as np
+    from repro.core.pipeline import GPipeConfig, make_engine
+    from repro.core.schedule import Placement
+    from repro.graphs import open_streamed, streamed_plan
+    from repro.models.gnn.net import build_gnn
+    from repro.train import optimizer as opt_lib
+
+    assert jax.device_count() == 4, jax.device_count()
+    ds = open_streamed("powerlaw-64k", num_nodes=512, block_size=256)
+    plan = streamed_plan(ds, 4, max_degree=16)
+    g0 = plan.batches[0].graph
+    m = build_gnn("gcn", g0.num_features, g0.num_classes, hidden=16, depth=2)
+    params = m.init_params(jax.random.PRNGKey(0))
+    opt = opt_lib.adam(1e-2)
+    cases = [
+        ("fill_drain", (1, 1, 1, 1), Placement.ring(4, rotation=1), 1),
+        ("1f1b", (1, 1, 1, 1), None, 1),
+        ("zb-h1", (1, 1, 1, 1), None, 1),
+        ("1f1b", (2, 2), None, 2),  # 2 replicas x 2-stage ring
+    ]
+    for schedule, balance, placement, dp in cases:
+        engines = [
+            make_engine(m, GPipeConfig(engine="compiled", balance=balance,
+                chunks=4, schedule=schedule, placement=placement,
+                data_parallel=dp, overlap=overlap))
+            for overlap in ("off", "double-buffer")
+        ]
+        ps = [params, params]
+        os_ = [opt.init(params), opt.init(params)]
+        key = jax.random.PRNGKey(42)
+        stats = [{}, {}]
+        for _ in range(2):
+            key, rng = jax.random.split(key)
+            for i, eng in enumerate(engines):
+                ps[i], os_[i], _ = eng.train_step(
+                    ps[i], os_[i], plan, rng, opt, stats=stats[i])
+        assert stats[1]["wire_latency"] == 2 and stats[0]["wire_latency"] == 1
+        for a, b in zip(jax.tree_util.tree_leaves(ps[0]),
+                        jax.tree_util.tree_leaves(ps[1])):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                schedule, dp, float(np.max(np.abs(np.asarray(a) - np.asarray(b)))))
+        print('MD_OVERLAP_OK', schedule, dp)
+    """)
+    for schedule, dp in (("fill_drain", 1), ("1f1b", 1), ("zb-h1", 1), ("1f1b", 2)):
+        assert f"MD_OVERLAP_OK {schedule} {dp}" in out
 
 
 # ---------------------------------------------- aggregation backend matrix --

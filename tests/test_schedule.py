@@ -20,6 +20,7 @@ from repro.core.schedule import (
     get_schedule,
     lower_timeline,
     peak_live_activations,
+    retime_timeline,
     validate_timeline,
 )
 
@@ -362,20 +363,22 @@ def test_validate_timeline_rejects_bwd_before_next_stage_fwd():
 # --------------------------------------------------- timeline lowering --
 
 
-def _replay(low):
+def _replay(low, skip=()):
     """Interpret the lowered index arrays against an abstract machine and
     assert the dataflow is exact: every fwd reads the value its upstream
     stage produced, every bwd/bwd_b reads the stage input it stashed and the
     cotangent its downstream stage sent back, every bwd_w reads the residual
     its matching bwd_b banked, slots never clobber live values."""
     S, C, D, T = low.num_stages, low.num_chunks, low.num_devices, low.num_ticks
-    wire_f = [None] * D  # value arriving at device d this tick
-    wire_b = [None] * D
+    L = low.wire_latency  # sends reach the neighbour L ticks later
+    flight_f = [[None] * D for _ in range(L)]  # flight_f[0] arrives this tick
+    flight_b = [[None] * D for _ in range(L)]
     fstash = [[None] * (low.n_fslots + 1) for _ in range(D)]
     bstash = [[None] * (low.n_bslots + 1) for _ in range(D)]
     wstash = [[None] * (low.n_wslots + 1) for _ in range(D)]
     done_f, done_b, done_w, split = set(), set(), set(), set()
     for t in range(T):
+        wire_f, wire_b = flight_f.pop(0), flight_b.pop(0)
         send_f, send_b = [None] * D, [None] * D
         for d in range(D):
             if low.in_fslot[t, d] < low.n_fslots:
@@ -414,8 +417,11 @@ def _replay(low):
                     split.add((s, c))
                     assert low.store_wslot[t, d] < low.n_wslots, (t, d, "B has no W slot")
                     wstash[d][low.store_wslot[t, d]] = ("res", s, c)
-        wire_f, wire_b = send_f, send_b
-    assert done_f == {(s, c) for s in range(S) for c in range(C)}
+        flight_f.append(send_f)
+        flight_b.append(send_b)
+    assert done_f == {
+        (s, c) for s in range(S) for c in range(C) if c not in set(skip)
+    }
     assert done_b == done_f
     assert done_w == split  # every banked residual consumed, none invented
 
@@ -595,3 +601,102 @@ def test_forward_timeline_lowering():
         lower_timeline(
             FillDrainSchedule().timeline(S, C), S, C, forward_only=True
         )
+
+
+# ------------------------------------------- wire retiming / dead ticks --
+
+
+@pytest.mark.parametrize("S,C", [(2, 2), (4, 4), (4, 8), (3, 6), (6, 8)])
+def test_retimed_latency2_dataflow_exact(S, C):
+    """Retiming to wire latency 2 keeps the lowered dataflow exact: the
+    retimed timeline passes lowering's arrival validation at latency 2 and
+    the abstract-machine replay (arrivals land two ticks after the send, so
+    each tick's ppermute pair can be posted one tick early)."""
+    for sched in _schedules_for(S, C):
+        items = retime_timeline(sched.timeline(S, C), S, C, wire_latency=2)
+        low = lower_timeline(items, S, C, wire_latency=2)
+        assert low.wire_latency == 2
+        _replay(low)
+
+
+@pytest.mark.parametrize("S,C", [(4, 4), (4, 8), (3, 6)])
+def test_retime_preserves_per_device_order(S, C):
+    """Retiming moves items later in time only — each device still runs the
+    same (stage, chunk, phase) sequence, so stash slot assignment and the
+    executor's work arrays describe the same program."""
+    for sched in _schedules_for(S, C):
+        items = sorted(sched.timeline(S, C), key=lambda it: (it.tick, it.stage))
+        moved = retime_timeline(items, S, C, wire_latency=2)
+        assert len(moved) == len(items)
+        for d in {it.device for it in items}:
+            before = [(it.stage, it.chunk, it.phase)
+                      for it in sorted(items, key=lambda it: it.tick)
+                      if it.device == d]
+            after = [(it.stage, it.chunk, it.phase)
+                     for it in sorted(moved, key=lambda it: it.tick)
+                     if it.device == d]
+            assert after == before
+
+
+def test_latency2_lowering_requires_retime():
+    """An unretimed timeline has 1-tick wire edges; lowering it at latency 2
+    must refuse (the consumer would read a value still in flight)."""
+    items = OneFOneBSchedule().timeline(4, 4)
+    with pytest.raises(ValueError, match="retime the timeline first"):
+        lower_timeline(items, 4, 4, wire_latency=2)
+    with pytest.raises(ValueError, match="wire_latency"):
+        lower_timeline(items, 4, 4, wire_latency=0)
+
+
+@pytest.mark.parametrize("schedule,slack", [("fill_drain", 0), ("1f1b", 0), ("zb-h1", 1)])
+def test_skip_chunks_collapses_to_smaller_plan_tick_count(schedule, slack):
+    """Dead-tick elimination: lowering the C=4 timeline with the trailing
+    chunk skipped runs in the C=3 timeline's tick count — an empty chunk in
+    a ragged plan costs zero ticks, not a full pipeline pass. (zb-h1 keeps
+    one extra WORKING tick: its C=4 drain places deferred W ticks
+    differently than the native C=3 timeline does.)"""
+    S = 4
+    sched = get_schedule(schedule)
+    skipped = lower_timeline(sched.timeline(S, 4), S, 4, skip_chunks=(3,))
+    smaller = lower_timeline(sched.timeline(S, 3), S, 3)
+    assert skipped.num_ticks <= smaller.num_ticks + slack
+    assert skipped.num_ticks < lower_timeline(sched.timeline(S, 4), S, 4).num_ticks
+    _replay(skipped, skip=(3,))
+    # at wire latency 1 every surviving tick either works or banks an
+    # arrival — the all-idle ticks are gone
+    for t in range(skipped.num_ticks):
+        assert (
+            (skipped.phase[t] != PHASE_IDLE).any()
+            or (skipped.in_fslot[t] < skipped.n_fslots).any()
+            or (skipped.in_bslot[t] < skipped.n_bslots).any()
+        ), f"tick {t} is dead but survived"
+
+
+def test_skip_chunks_latency2_dataflow():
+    """skip_chunks composes with the retimed latency-2 lowering: arrival
+    distances stay exactly wire_latency across the tick remap."""
+    S, C = 4, 4
+    items = retime_timeline(OneFOneBSchedule().timeline(S, C), S, C, wire_latency=2)
+    low = lower_timeline(items, S, C, wire_latency=2, skip_chunks=(3,))
+    assert low.wire_latency == 2
+    _replay(low, skip=(3,))
+
+
+def test_skip_chunks_validates_before_filtering():
+    """Skip filtering happens AFTER full-timeline validation: an invalid
+    timeline is rejected even when the offending items are in the skipped
+    chunk, and out-of-range / total skips are named errors."""
+    S, C = 3, 2
+    items = FillDrainSchedule().timeline(S, C)
+    with pytest.raises(ValueError, match="outside the chunk range"):
+        lower_timeline(items, S, C, skip_chunks=(5,))
+    with pytest.raises(ValueError, match="removed every item"):
+        lower_timeline(items, S, C, skip_chunks=(0, 1))
+    # corrupt chunk 1's bwd ordering; skipping chunk 1 must not hide it
+    bad = [
+        WorkItem(0 if (it.chunk, it.phase) == (1, "bwd") else it.tick,
+                 it.stage, it.chunk, it.phase, it.device)
+        for it in items
+    ]
+    with pytest.raises(AssertionError):
+        lower_timeline(bad, S, C, skip_chunks=(1,))
