@@ -53,6 +53,14 @@ regressed:
     construction — the gate bounds the retimed program's per-TICK cost
     instead (``step_s/num_ticks`` double-buffer <= serialized), i.e. the
     step-time cost must stay below the statically-accounted tick inflation;
+  * **auto** — the ``--auto`` planner rows (``auto/pick`` + ``auto/hand/*``
+    from fig3's ``_auto_bench``): the pick's measured step must be within
+    ``--threshold`` of the BEST measured hand-picked config in the same
+    interleaved run (``auto-pick``, run-internal so machine speed cancels),
+    and its predicted step time must stay within ``--auto-pred-ratio`` of
+    the measurement in either direction (``auto-prediction`` — loose, since
+    forced-host per-tick dispatch is unmodeled, but it catches a broken
+    cost model). Both rules fail by name;
   * **zero-bubble** — at every chunk count >= 4 the compiled zb-h1 row must
     beat or match the same run's compiled 1F1B step time (within the same
     ``--threshold`` slack the speed gate uses), its bubble fraction must sit
@@ -137,13 +145,14 @@ def normalized_ratios(rows: dict) -> tuple[dict[str, float], list[str]]:
     return out, problems
 
 
-def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) -> list[str]:
+def check(baseline: dict, current: dict, *, threshold: float, absolute: bool,
+          auto_pred_ratio: float = 25.0) -> list[str]:
     failures: list[str] = []
     b_rows, c_rows = baseline["rows"], current["rows"]
 
     for key in sorted(b_rows):
         if key.startswith(
-            ("compiled/", "partition/", "sparse/", "scale/", "overlap/")
+            ("compiled/", "partition/", "sparse/", "scale/", "overlap/", "auto/")
         ) and key not in c_rows:
             failures.append(f"coverage: baseline row {key} missing from current run")
 
@@ -315,6 +324,70 @@ def check(baseline: dict, current: dict, *, threshold: float, absolute: bool) ->
                     )
                 print(f"  {c_scale[n][0]:40s} baseline {base:8.3f}x-min "
                       f"current {cur:8.3f}x-min  {status}")
+
+    # auto gate: the ``--auto`` planner rows from fig3's ``_auto_bench``.
+    # Two named rules:
+    #   * auto-pick — the planner's pick, measured interleaved with the
+    #     hand-picked configs in the same run (machine speed cancels), must
+    #     be within ``threshold`` of the BEST measured hand-picked config: a
+    #     planner that picks badly is a regression even when every engine
+    #     got faster;
+    #   * auto-prediction — the pick's predicted step time must stay within
+    #     ``auto_pred_ratio`` of its measurement (either direction). The
+    #     bound is deliberately loose: on forced-host CPU the unmodeled
+    #     per-tick dispatch dominates absolute step time (the partition
+    #     rows show the same gap), but a prediction off by the full ratio
+    #     cap means the cost model broke, not that the machine drifted.
+    pick = c_rows.get("auto/pick")
+    hands = {k: v for k, v in c_rows.items() if k.startswith("auto/hand/")}
+    if pick is None:
+        if "auto/pick" in b_rows:
+            failures.append("auto-pick: baseline has auto/pick but the "
+                            "current run produced none")
+    else:
+        if not hands:
+            failures.append(
+                "auto-pick: auto/pick present but no auto/hand/* rows to "
+                "compare the pick against"
+            )
+        else:
+            best_key = min(hands, key=lambda k: hands[k]["step_s"])
+            best = hands[best_key]["step_s"]
+            status = "ok"
+            if not best > 0:
+                failures.append(
+                    f"auto-pick: best hand row {best_key} has non-positive "
+                    f"step_s {best!r}"
+                )
+            elif pick["step_s"] > best * threshold:
+                status = "REGRESSED"
+                failures.append(
+                    f"auto-pick: planner pick ({pick.get('schedule')}/"
+                    f"chunks{pick.get('chunks')}, {pick['step_s']:.4f}s) not "
+                    f"within {threshold:.2f}x of best hand-picked {best_key} "
+                    f"({best:.4f}s)"
+                )
+            if best > 0:
+                print(f"  {'auto/pick':40s} vs best hand ({best_key}) "
+                      f"{pick['step_s'] / best:8.3f}x  {status}")
+        pred, meas = pick.get("predicted_step_s"), pick["step_s"]
+        if not (pred and pred > 0 and meas > 0):
+            failures.append(
+                f"auto-prediction: auto/pick predicted_step_s {pred!r} / "
+                f"step_s {meas!r} unusable"
+            )
+        else:
+            off = max(pred / meas, meas / pred)
+            status = "ok"
+            if off > auto_pred_ratio:
+                status = "REGRESSED"
+                failures.append(
+                    f"auto-prediction: predicted {pred:.4f}s vs measured "
+                    f"{meas:.4f}s — off by {off:.1f}x (allowed "
+                    f"{auto_pred_ratio:.1f}x)"
+                )
+            print(f"  {'auto/pick':40s} predicted/measured "
+                  f"{pred / meas:8.3f}x  {status}")
 
     # overlap gate: the double-buffered wire rows (``overlap/*`` from
     # fig3's ``_overlap_bench``). Both rows must have matched the host
@@ -536,6 +609,11 @@ def main() -> int:
                     help="max allowed current/baseline slowdown factor (1.20 = +20%%)")
     ap.add_argument("--absolute", action="store_true",
                     help="compare raw seconds instead of host-normalized ratios")
+    ap.add_argument("--auto-pred-ratio", type=float, default=25.0,
+                    help="max allowed predicted/measured step-time ratio (either "
+                         "direction) for the auto/pick row — loose on purpose: "
+                         "forced-host CPU dispatch overhead is unmodeled, but a "
+                         "prediction this far off means the cost model broke")
     ap.add_argument("--serving-baseline", default=str(DEFAULT_SERVING_BASELINE))
     ap.add_argument("--serving-current", default=None,
                     help="fresh BENCH_serve.json from repro.launch.serve_gnn --json-out")
@@ -560,7 +638,9 @@ def main() -> int:
             current = json.load(f)
         print(f"perf gate: baseline={args.baseline} threshold={args.threshold:.2f} "
               f"mode={'absolute' if args.absolute else 'host-normalized'}")
-        failures += check(baseline, current, threshold=args.threshold, absolute=args.absolute)
+        failures += check(baseline, current, threshold=args.threshold,
+                          absolute=args.absolute,
+                          auto_pred_ratio=args.auto_pred_ratio)
     if args.serving_current is not None:
         with open(args.serving_baseline) as f:
             serving_baseline = json.load(f)

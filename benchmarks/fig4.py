@@ -51,7 +51,7 @@ def run(*, dataset="cora", epochs=60, strategies=("sequential", "greedy", "halo"
             )
             rows.append((strategy, chunks, r["val_acc"]))
     # schedule-equivalence columns: same halo config, every schedule
-    for schedule in ("fill_drain", "1f1b", "interleaved", "zb-h1"):
+    for schedule in ("fill_drain", "1f1b", "interleaved", "zb-h1", "zb-v"):
         if schedule == "fill_drain" and halo4 is not None:
             r = halo4  # identical config already trained above
         else:
@@ -71,7 +71,8 @@ def run(*, dataset="cora", epochs=60, strategies=("sequential", "greedy", "halo"
     # interleaved the scheduled executor. Accuracy must sit on top of the
     # host fill-drain row for all of them (schedule- AND engine-invariance).
     for schedule, pipe_devices in (
-        ("fill_drain", None), ("1f1b", None), ("interleaved", 2), ("zb-h1", None),
+        ("fill_drain", None), ("1f1b", None), ("interleaved", 2),
+        ("zb-h1", None), ("zb-v", 2),
     ):
         r = run_gnn(_args(
             dataset, epochs, strategy="halo", engine="compiled",

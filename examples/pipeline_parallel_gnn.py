@@ -24,7 +24,8 @@ def print_schedule_matrix(stages=4, pipe_devices=2, chunk_counts=(2, 4, 8)):
     print(f"  {'schedule':<12} {'chunks':>6} {'ticks':>6} {'bubble':>8} {'peak_live':>10}")
     for name, kw in (("fill_drain", {}), ("1f1b", {}),
                      ("interleaved", {"num_devices": pipe_devices}),
-                     ("zb-h1", {})):
+                     ("zb-h1", {}),
+                     ("zb-v", {"num_devices": pipe_devices})):
         sched = get_schedule(name, **kw)
         for chunks in chunk_counts:
             try:
@@ -68,6 +69,11 @@ def main():
     print("== ... and zero-bubble ZB-H1 (split B/W backward, deferred weight grads) ==")
     halo_zb = run_gnn(cfg(stages=4, chunks=4, strategy="halo", engine="compiled",
                           schedule="zb-h1"))
+    print("== ... and ZB-V (split backward + 2 virtual stages/device) ==")
+    halo_zbv = run_gnn(cfg(stages=4, chunks=4, strategy="halo", engine="compiled",
+                           schedule="zb-v"))
+    print("== --auto: the planner picks schedule/chunks/balance/placement ==")
+    auto = run_gnn(cfg(stages=4, strategy="halo", engine="compiled", auto=True))
 
     print("\nsummary (val accuracy):")
     print(f"  full batch               {full['val_acc']:.3f}")
@@ -86,6 +92,13 @@ def main():
           f"bubble {halo_zb['bubble_fraction']:.3f} vs 1f1b "
           f"{halo_c1['bubble_fraction']:.3f}, peak_live "
           f"{halo_zb['peak_live_activations']}")
+    print(f"  compiled halo / zb-v     {halo_zbv['val_acc']:.3f}   "
+          f"bubble {halo_zbv['bubble_fraction']:.3f} "
+          f"(2 virtual stages/device + split B/W)")
+    print(f"  compiled halo / --auto   {auto['val_acc']:.3f}   "
+          f"picked {auto['schedule']}/chunks{auto['chunks']} "
+          f"predicted {auto['predicted_step_s'] * 1e3:.1f}ms "
+          f"measured {auto['median_epoch_s'] * 1e3:.1f}ms")
     print_schedule_matrix()
 
 

@@ -28,7 +28,7 @@ from repro.core.pipeline import GPipeConfig
 from repro.core.schedule import Placement
 
 ENGINE_CHOICES = ("host", "compiled")
-SCHEDULE_CHOICES = ("fill_drain", "gpipe", "1f1b", "interleaved", "zb-h1")
+SCHEDULE_CHOICES = ("fill_drain", "gpipe", "1f1b", "interleaved", "zb-h1", "zb-v")
 PARTITION_CHOICES = ("uniform", "profiled")
 BACKEND_CHOICES = ("padded", "dense", "pallas")
 OVERLAP_CHOICES = ("off", "double-buffer", "async")
@@ -83,6 +83,19 @@ def add_pipeline_args(
                          "arrivals are consumed (bit-identical updates); "
                          "async additionally requests XLA's latency-hiding "
                          "scheduler (core.overlap_report)")
+    ap.add_argument("--auto", action="store_true",
+                    help="self-tuning planner (core.autotune.plan_pipeline): "
+                         "profile per-layer costs once, enumerate schedule x "
+                         "chunks x balance x placement, pick the argmin "
+                         "predicted step time — overrides --schedule/--chunks/"
+                         "--partition/--placement")
+    ap.add_argument("--auto-budget", type=int, default=None,
+                    help="cap on the number of candidate configurations the "
+                         "--auto planner evaluates (ranked enumeration order; "
+                         "default: exhaustive)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="with --auto: print the ranked candidate table and "
+                         "exit without training")
     return ap
 
 
@@ -101,6 +114,9 @@ class PipelineCLIConfig:
     backend: str = "padded"
     data_parallel: int = 1
     overlap: str = "off"
+    auto: bool = False
+    auto_budget: int | None = None
+    dry_run: bool = False
 
     @classmethod
     def from_args(cls, args) -> "PipelineCLIConfig":
@@ -112,9 +128,10 @@ class PipelineCLIConfig:
 
     @property
     def resolved_pipe_devices(self) -> int | None:
-        """--pipe-devices with the interleaved default applied (2 physical
-        devices -> V = stages/2 virtual stages per device)."""
-        if self.schedule == "interleaved" and self.pipe_devices is None:
+        """--pipe-devices with the round-robin default applied: interleaved
+        and zb-v place V = stages/2 virtual stages on 2 physical devices
+        unless told otherwise."""
+        if self.schedule in ("interleaved", "zb-v") and self.pipe_devices is None:
             return 2
         return self.pipe_devices
 

@@ -28,8 +28,11 @@ produces updates bit-identical to the host fill-drain baseline).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
+import json
 import math
+import os
 import time
 
 import jax
@@ -179,6 +182,104 @@ def profile_layer_costs(
         bwd_b=tuple(b_s),
         bwd_w=tuple(w_s),
     )
+
+
+def profile_fingerprint(model, params, graph, backend: str = "padded") -> str:
+    """The cache key a profile is stored under: a digest of the model's
+    layer stack (names + every param leaf's shape/dtype), the chunk shape
+    the engines dispatch per tick, and the aggregation backend. Two runs
+    measuring the same (model, chunk shape, backend) triple re-measure the
+    same jitted programs, so their costs are interchangeable — anything
+    else (different widths, padding, backend lowering) is a different
+    key."""
+    spec = {
+        "layers": [layer.name for layer in model.layers],
+        "params": [
+            [(list(a.shape), str(a.dtype)) for a in jax.tree_util.tree_leaves(p)]
+            for p in params
+        ],
+        "chunk": [
+            list(graph.features.shape),
+            list(graph.neighbors.shape),
+        ],
+        "backend": backend,
+    }
+    return hashlib.sha1(json.dumps(spec, sort_keys=True).encode()).hexdigest()[:16]
+
+
+# in-process profile cache: fingerprint -> LayerCosts. One sweep (fig3's
+# matrix, the --auto planner's chunk ladder) profiles each shape once.
+_PROFILE_CACHE: dict[str, LayerCosts] = {}
+
+
+def cached_profile_layer_costs(
+    model,
+    params,
+    graph,
+    *,
+    backend: str = "padded",
+    cache_path: str | None = None,
+    refresh: bool = False,
+    **profile_kwargs,
+) -> LayerCosts:
+    """``profile_layer_costs`` behind a two-level cache keyed by
+    ``profile_fingerprint`` (model layer stack + chunk shape + backend):
+
+      * an in-process dict, so ``--auto`` and ``--partition profiled``
+        never re-profile the same shape within a run;
+      * an optional JSON sidecar at ``cache_path``, so a benchmark sweep
+        (fig3's ``args.layer_costs`` pass-through) reuses measurements
+        across processes — and ships them as an artifact.
+
+    ``refresh=True`` bypasses both reads (the write still lands, replacing
+    the stale entry). Corrupt or unreadable sidecars are ignored, never
+    fatal: the profiler is the fallback."""
+    key = profile_fingerprint(model, params, graph, backend)
+    if not refresh:
+        hit = _PROFILE_CACHE.get(key)
+        if hit is not None:
+            return hit
+        if cache_path and os.path.exists(cache_path):
+            try:
+                with open(cache_path) as f:
+                    entry = json.load(f).get(key)
+            except (OSError, json.JSONDecodeError):
+                entry = None
+            if entry is not None:
+                costs = LayerCosts(
+                    names=tuple(entry["names"]),
+                    fwd=tuple(entry["fwd"]),
+                    bwd=tuple(entry["bwd"]),
+                    bwd_b=tuple(entry["bwd_b"]),
+                    bwd_w=tuple(entry["bwd_w"]),
+                )
+                _PROFILE_CACHE[key] = costs
+                return costs
+    costs = profile_layer_costs(model, params, graph, **profile_kwargs)
+    _PROFILE_CACHE[key] = costs
+    if cache_path:
+        store: dict = {}
+        if os.path.exists(cache_path):
+            try:
+                with open(cache_path) as f:
+                    store = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                store = {}
+        store[key] = {
+            "names": list(costs.names),
+            "fwd": list(costs.fwd),
+            "bwd": list(costs.bwd),
+            "bwd_b": list(costs.bwd_b),
+            "bwd_w": list(costs.bwd_w),
+        }
+        parent = os.path.dirname(cache_path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        tmp = f"{cache_path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(store, f, indent=1, sort_keys=True)
+        os.replace(tmp, cache_path)
+    return costs
 
 
 def uniform_balance(n_layers: int, num_stages: int) -> tuple[int, ...]:

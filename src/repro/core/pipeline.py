@@ -16,12 +16,12 @@ two implementations ship:
     stages the same program body runs under ``jax.vmap(axis_name="stage")``
     — identical collective semantics, still one fused XLA program.
 
-``make_engine(model, config)`` picks one via ``config.engine`` (the legacy
-``make_engine("host" | "compiled", model, config)`` spelling survives as a
-deprecated shim). Both engines expose ``compile_eval(params, graph) ->
-EvalProgram`` — a per-shape forward-only program handle with the params
-bound once — which ``evaluate`` and the serving frontend
-(``repro.launch.serve_gnn``) share.
+``make_engine(model, config)`` picks one via ``config.engine``; ``config``
+may also be a planner ``PipelinePlan`` (``repro.core.autotune``), so an
+``--auto`` pick replays directly. Both engines expose
+``compile_eval(params, graph) -> EvalProgram`` — a per-shape forward-only
+program handle with the params bound once — which ``evaluate`` and the
+serving frontend (``repro.launch.serve_gnn``) share.
 
 GPipe's faithful semantics:
 
@@ -97,8 +97,8 @@ class GPipeConfig:
     balance: tuple[int, ...]  # layers per stage; sums to len(model.layers)
     chunks: int
     devices: tuple | None = None  # optional per-stage device placement
-    schedule: str = "fill_drain"  # "fill_drain"|"gpipe"|"1f1b"|"interleaved"|"zb-h1"
-    num_devices: int | None = None  # interleaved: physical devices (V = stages/devices)
+    schedule: str = "fill_drain"  # any repro.core.schedule.SCHEDULES name
+    num_devices: int | None = None  # interleaved/zb-v: physical devices (V = stages/devices)
     remat: bool = True  # compiled engine: GPipe-style activation re-materialization
     # stage -> device assignment overriding the schedule's default (ring
     # rotations + a physical device order); validated against the lowering's
@@ -1269,37 +1269,31 @@ class CompiledGNNPipeline(PipelineEngine):
 ENGINES = {"host": GPipe, "compiled": CompiledGNNPipeline}
 
 
-def make_engine(model, config=None, _legacy_config=None) -> PipelineEngine:
+def make_engine(model, config) -> PipelineEngine:
     """Engine factory: ``host`` (paper-faithful GPipe queue loop) or
     ``compiled`` (one jitted SPMD program), selected by ``config.engine``:
 
         make_engine(model, GPipeConfig(engine="compiled", balance=..., ...))
 
-    Serving, training and the benchmarks all construct engines from the one
-    assembled ``GPipeConfig``. The pre-serving ``make_engine(name, model,
-    config)`` spelling still works as a thin deprecated shim (the positional
-    name wins over ``config.engine`` there, preserving old call sites)."""
-    if isinstance(model, str):
-        import warnings
+    ``config`` is either an assembled ``GPipeConfig`` or a planner
+    ``PipelinePlan`` (``repro.core.autotune``) — a plan converts through its
+    own ``to_config()``, so an ``--auto`` pick is directly replayable on
+    either engine. Anything else is a ``TypeError``. (The pre-PR-6
+    name-first ``make_engine(name, model, config)`` shim is gone; spell the
+    engine via ``config.engine``.)"""
+    from repro.core.autotune import PipelinePlan  # local: autotune imports us
 
-        warnings.warn(
-            "make_engine(name, model, config) is deprecated; use "
-            "make_engine(model, config) with config.engine set",
-            DeprecationWarning,
-            stacklevel=2,
+    if isinstance(config, PipelinePlan):
+        config = config.to_config()
+    if not isinstance(config, GPipeConfig):
+        raise TypeError(
+            f"make_engine(model, config) expects a GPipeConfig or a "
+            f"PipelinePlan, got {type(config).__name__}"
         )
-        name, model, config = model, config, _legacy_config
-        if config is None:
-            raise TypeError("make_engine(name, model, config): config is required")
-    else:
-        if not isinstance(config, GPipeConfig):
-            raise TypeError(
-                f"make_engine(model, config) expects a GPipeConfig, got "
-                f"{type(config).__name__}"
-            )
-        name = config.engine
     try:
-        cls = ENGINES[name]
+        cls = ENGINES[config.engine]
     except KeyError:
-        raise KeyError(f"unknown engine {name!r}; have {tuple(ENGINES)}") from None
+        raise KeyError(
+            f"unknown engine {config.engine!r}; have {tuple(ENGINES)}"
+        ) from None
     return cls(model, config)

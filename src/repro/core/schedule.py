@@ -235,12 +235,19 @@ def validate_timeline(
         assert it.phase in ("fwd", "bwd", "bwd_b", "bwd_w"), it
         seen[key] = it.tick
         dev[key] = it.device
-    busy = {(it.tick, it.device) for it in items}
-    assert len(busy) == len(items), "a device runs two items in one tick"
+    busy: dict[tuple[int, int], WorkItem] = {}
+    for it in items:
+        other = busy.setdefault((it.tick, it.device), it)
+        assert other is it, (
+            f"device {it.device} runs two items in tick {it.tick}: "
+            f"(stage {other.stage}, chunk {other.chunk}, {other.phase}) and "
+            f"(stage {it.stage}, chunk {it.chunk}, {it.phase})"
+        )
     stage_dev: dict[int, int] = {}
     for it in items:
         assert stage_dev.setdefault(it.stage, it.device) == it.device, (
-            it.stage, "stage placed on two devices",
+            f"stage {it.stage} placed on two devices: "
+            f"{stage_dev[it.stage]} and {it.device}"
         )
 
     n_split = 0
@@ -1255,15 +1262,127 @@ class ZeroBubbleH1Schedule(Schedule):
         return makespan + C * rebuild_cost_per_chunk
 
 
+class ZeroBubbleVSchedule(ZeroBubbleH1Schedule):
+    """Zero-bubble V (after Qi et al.'s ZB-V shape): zb-h1's split backward
+    COMPOSED with interleaving — ``num_physical`` devices each host
+    V = S/num_physical virtual stages placed round-robin (stage k on device
+    k mod D, the same circular hop ``lower_timeline`` routes for the
+    interleaved schedule), and every backward splits into the critical-path
+    B half and the bubble-filling deferred W half. Interleaving divides the
+    warmup bubble by ~V while the W stream soaks up the drain bubble, so
+    both ends of the step shrink at once.
+
+    Note the honest departure from the paper's letter: ZB-V's literal
+    placement folds the stage chain back on itself (device d hosts stages d
+    and 2D-1-d), which is NOT ring-compatible — the compiled executors route
+    exactly one ``ppermute`` ring, and ``lower_timeline`` rejects any
+    placement where stage s+1 is not one hop downstream of stage s. The
+    round-robin V-stage placement keeps the paper's two bubble levers
+    (interleaving + B/W split) inside the ring contract, so zb-v runs
+    unmodified through both engines, every ``Placement`` rotation, and the
+    double-buffered overlap executors, bit-identical to host fill-drain.
+
+    Scheduling is the same greedy list scheduler as zb-h1 (per-device
+    priority B > F > W, 1F1B's S-s in-flight window on the B that frees each
+    stage input), with the device free-time shared by all virtual stages a
+    device hosts. Requires S % D == 0; unlike interleaved's fixed streams
+    the greedy scheduler needs no chunk-count constraint."""
+
+    name = "zb-v"
+
+    def __init__(self, num_physical: int):
+        if num_physical < 1:
+            raise ValueError(f"num_physical must be >= 1, got {num_physical}")
+        self.num_physical = num_physical
+
+    def num_devices(self, num_stages: int) -> int:
+        """The configured physical-device count (V stages share each)."""
+        return self.num_physical
+
+    def device_of(self, stage: int, num_stages: int) -> int:
+        """Round-robin: virtual stage k lives on device k mod D."""
+        return stage % self.num_physical
+
+    def _check(self, S):
+        D = self.num_physical
+        if S % D != 0:
+            raise ValueError(
+                f"zb-v schedule needs num_stages ({S}) divisible by "
+                f"num_physical devices ({D})"
+            )
+
+    def _ops(self, S, C, f=1.0, b=1.0, w=1.0):
+        self._check(S)
+        D = self.num_physical
+        dev_of = lambda s: s % D  # noqa: E731
+        done: dict[tuple[int, int, str], tuple[float, float]] = {}
+        nxt = {"fwd": [0] * S, "bwd_b": [0] * S, "bwd_w": [0] * S}
+        free = {d: 0.0 for d in range(D)}  # shared by the device's V stages
+        cost = {
+            "fwd": _stage_cost_vector(f, S),
+            "bwd_b": _stage_cost_vector(b, S),
+            "bwd_w": _stage_cost_vector(w, S),
+        }
+        n_total = 3 * S * C
+        while len(done) < n_total:
+            best = None
+            for s in range(S):
+                dev = dev_of(s)
+                # candidate B (priority 0: the drain's critical path)
+                c = nxt["bwd_b"][s]
+                if c < C:
+                    deps = [(s, c, "fwd")]
+                    deps.append((S - 1, c, "fwd") if s == S - 1 else (s + 1, c, "bwd_b"))
+                    if all(d in done for d in deps):
+                        start = max([free[dev]] + [done[d][1] for d in deps])
+                        cand = ((start, 0, s, c), s, c, "bwd_b")
+                        if best is None or cand[0] < best[0]:
+                            best = cand
+                # candidate F (priority 1), 1F1B's S - s in-flight window on B
+                c = nxt["fwd"][s]
+                if c < C:
+                    deps = []
+                    if s > 0:
+                        deps.append((s - 1, c, "fwd"))
+                    if c - (S - s) >= 0:
+                        deps.append((s, c - (S - s), "bwd_b"))
+                    if all(d in done for d in deps):
+                        start = max([free[dev]] + [done[d][1] for d in deps])
+                        cand = ((start, 1, s, c), s, c, "fwd")
+                        if best is None or cand[0] < best[0]:
+                            best = cand
+                # candidate W (priority 2: pure bubble filler)
+                c = nxt["bwd_w"][s]
+                if c < C and (s, c, "bwd_b") in done:
+                    start = max(free[dev], done[(s, c, "bwd_b")][1])
+                    cand = ((start, 2, s, c), s, c, "bwd_w")
+                    if best is None or cand[0] < best[0]:
+                        best = cand
+            assert best is not None, "zb-v scheduler stalled (dependency cycle?)"
+            (start, _, _, _), s, c, phase = best
+            done[(s, c, phase)] = (start, start + cost[phase][s])
+            free[dev_of(s)] = start + cost[phase][s]
+            nxt[phase][s] += 1
+        makespan = max(end for _, end in done.values())
+        return done, makespan
+
+    def timeline(self, num_stages: int, num_chunks: int) -> list[WorkItem]:
+        """Interleaved round-robin placement with every backward split into
+        B then a bubble-filling deferred W (the ring-compatible zb-v)."""
+        ops, _ = self._ops(num_stages, num_chunks)
+        D = self.num_physical
+        return _ops_to_items(ops, lambda s: s % D)
+
+
 # -------------------------------------------------------------- registry --
 
-SCHEDULES = ("fill_drain", "gpipe", "1f1b", "interleaved", "zb-h1")
+SCHEDULES = ("fill_drain", "gpipe", "1f1b", "interleaved", "zb-h1", "zb-v")
 
 
 def get_schedule(name: str, *, num_devices: int | None = None) -> Schedule:
     """Schedule factory. ``num_devices`` is the physical device count for
-    ``interleaved`` (stages are placed round-robin on them); other schedules
-    place one stage per device and ignore it."""
+    ``interleaved`` and ``zb-v`` (stages are placed round-robin on them);
+    other schedules place one stage per device and ignore it."""
     if name in ("fill_drain", "gpipe"):
         return FillDrainSchedule()
     if name == "1f1b":
@@ -1274,7 +1393,11 @@ def get_schedule(name: str, *, num_devices: int | None = None) -> Schedule:
         if num_devices is None:
             raise ValueError("interleaved schedule requires num_devices")
         return InterleavedSchedule(num_devices)
-    raise KeyError(f"unknown schedule {name!r}; have {SCHEDULES}")
+    if name in ("zb-v", "zb_v"):
+        if num_devices is None:
+            raise ValueError("zb-v schedule requires num_devices")
+        return ZeroBubbleVSchedule(num_devices)
+    raise KeyError(f"unknown schedule {name!r}; valid registry: {SCHEDULES}")
 
 
 # ------------------------------------------- fill-drain shorthand (paper) --

@@ -323,7 +323,23 @@ def run(args) -> dict:
     params = model.init_params(jax.random.PRNGKey(args.seed))
 
     cli = PipelineCLIConfig.from_args(args)
-    engine = make_engine(model, cli.gpipe_config())
+    if cli.auto:
+        # serving shares the planner: the pick's schedule/chunks/balance/
+        # placement configure the engine whose eval programs serve traffic
+        from repro.core.autotune import plan_for_cli
+
+        auto_plan = plan_for_cli(model, g, cli, params=params, seed=args.seed)
+        print(auto_plan.format_table(limit=10))
+        if cli.dry_run:
+            return {"mode": "auto-dry-run", "schedule": auto_plan.schedule,
+                    "chunks": auto_plan.chunks, "balance": list(auto_plan.balance)}
+        cli = dataclasses.replace(
+            cli, schedule=auto_plan.schedule, chunks=auto_plan.chunks,
+            stages=auto_plan.num_stages,
+        )
+        engine = make_engine(model, auto_plan)
+    else:
+        engine = make_engine(model, cli.gpipe_config())
     buckets = ShapeBuckets.geometric(g, base=args.bucket_base)
     server = GNNServer(engine, params, g, hops=args.hops, buckets=buckets)
 

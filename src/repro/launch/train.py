@@ -105,10 +105,58 @@ def run_gnn(args) -> dict:
     cli = PipelineCLIConfig.from_args(args)
     schedule, engine, partition = cli.schedule, cli.engine, cli.partition
     pipe_devices = cli.resolved_pipe_devices
+    chunks = args.chunks
+
+    if cli.auto:
+        # self-tuning planner: profile -> enumerate -> predict -> pick.
+        # Overrides --schedule/--chunks/--partition/--placement with the
+        # argmin-predicted configuration; --dry-run stops after the table.
+        if streamed:
+            raise ValueError(
+                "--auto profiles representative chunks of the full graph; "
+                "streamed datasets have no full-graph batch to plan over"
+            )
+        from repro.core.autotune import plan_for_cli
+
+        auto_plan = plan_for_cli(
+            model, g, cli,
+            strategy=args.strategy,
+            seed=args.seed,
+            cache_path=getattr(args, "cost_cache", None),
+            costs_by_chunks=getattr(args, "costs_by_chunks", None),
+        )
+        print(auto_plan.format_table(limit=10))
+        if cli.dry_run:
+            out = {
+                "mode": "auto-dry-run",
+                "schedule": auto_plan.schedule,
+                "chunks": auto_plan.chunks,
+                "balance": list(auto_plan.balance),
+                "predicted_step_s": auto_plan.predicted_step_s,
+                "evaluated": auto_plan.evaluated,
+            }
+            print(out)
+            return out
+        schedule, partition = auto_plan.schedule, "auto"
+        chunks, balance = auto_plan.chunks, auto_plan.balance
+        plan = make_plan(g, chunks, strategy=args.strategy, halo_hops=2, seed=args.seed)
+        pipe = make_engine(model, auto_plan)
+        print(f"[gnn] engine={engine} stages={len(balance)} chunks={chunks} "
+              f"strategy={plan.strategy} schedule={schedule} balance={balance} "
+              f"edge_cut={plan.edge_cut:.3f} rebuild_s={plan.rebuild_seconds:.3f} "
+              f"bubble={pipe.describe()['bubble_fraction']:.2f} "
+              f"predicted_step={auto_plan.predicted_step_s * 1e3:.2f}ms")
+        return _train_pipeline(
+            args, g, model, plan, pipe,
+            engine=engine, schedule=schedule, partition=partition,
+            balance=balance, chunks=chunks, streamed=streamed,
+            predicted_step_s=auto_plan.predicted_step_s,
+        )
+
     if streamed:
         plan = stream_plan
     else:
-        plan = make_plan(g, args.chunks, strategy=args.strategy, halo_hops=2, seed=args.seed)
+        plan = make_plan(g, chunks, strategy=args.strategy, halo_hops=2, seed=args.seed)
 
     if partition == "profiled":
         # cost-model-driven balance: measure per-layer fwd/B/W cost on one
@@ -117,14 +165,16 @@ def run_gnn(args) -> dict:
         # schedule's weighted makespan. A caller sweeping many configs over
         # the same model/plan shape (fig3's matrix) passes the measured
         # ``layer_costs`` in to skip re-profiling per cell.
-        from repro.core.costmodel import choose_balance, profile_layer_costs
+        from repro.core.costmodel import cached_profile_layer_costs, choose_balance
         from repro.core.schedule import get_schedule
 
         costs = getattr(args, "layer_costs", None)
         if costs is None:
             chunk0 = jax.tree_util.tree_map(lambda a: a[0], plan.stacked().graph)
-            costs = profile_layer_costs(
-                model, model.init_params(jax.random.PRNGKey(args.seed)), chunk0
+            costs = cached_profile_layer_costs(
+                model, model.init_params(jax.random.PRNGKey(args.seed)), chunk0,
+                backend=args.backend,
+                cache_path=getattr(args, "cost_cache", None),
             )
         balance, predicted = choose_balance(
             costs,
@@ -142,10 +192,28 @@ def run_gnn(args) -> dict:
         balance = cli.uniform_balance()
 
     pipe = make_engine(model, cli.gpipe_config(balance))
-    print(f"[gnn] engine={engine} stages={args.stages} chunks={args.chunks} "
+    print(f"[gnn] engine={engine} stages={args.stages} chunks={chunks} "
           f"strategy={plan.strategy} schedule={schedule} balance={balance} "
           f"edge_cut={plan.edge_cut:.3f} rebuild_s={plan.rebuild_seconds:.3f} "
           f"bubble={pipe.describe()['bubble_fraction']:.2f}")
+    return _train_pipeline(
+        args, g, model, plan, pipe,
+        engine=engine, schedule=schedule, partition=partition,
+        balance=balance, chunks=chunks, streamed=streamed,
+    )
+
+
+def _train_pipeline(
+    args, g, model, plan, pipe, *,
+    engine, schedule, partition, balance, chunks, streamed,
+    predicted_step_s=None,
+):
+    """The shared pipeline training loop: epochs over ``pipe.train_step``,
+    engine-appropriate evaluation, and the result/metrics dict every caller
+    (manual flags, profiled partition, ``--auto`` plan) prints and
+    returns."""
+    from repro.train import optimizer as opt_lib
+    from repro.train.loop import make_eval
 
     key = jax.random.PRNGKey(args.seed)
     key, init_key = jax.random.split(key)
@@ -184,7 +252,7 @@ def run_gnn(args) -> dict:
         "schedule": schedule,
         "partition": partition,
         "balance": list(balance),
-        "chunks": args.chunks,
+        "chunks": chunks,
         "edge_cut": plan.edge_cut,
         "bubble_fraction": sched_stats.get("bubble_fraction"),
         "peak_live_activations": sched_stats.get("measured_peak_live_activations"),
@@ -201,6 +269,8 @@ def run_gnn(args) -> dict:
         "median_epoch_s": float(np.median(times[1:])) if len(times) > 1 else times[0],
         "rebuild_s": plan.rebuild_seconds,
     }
+    if predicted_step_s is not None:
+        out["predicted_step_s"] = predicted_step_s
     print(out)
     return out
 

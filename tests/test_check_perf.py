@@ -189,6 +189,88 @@ def test_partition_gate_coverage():
     ), failures
 
 
+# -------------------------------------------------------------- auto gate --
+
+
+def _auto_rows(pick, best_hand, *, predicted=None, other_hand=None):
+    rows = _base_rows()
+    rows["auto/hand/1f1b_profiled/chunks4"] = {
+        "step_s": best_hand, "schedule": "1f1b", "balance": [1, 1, 1, 5],
+    }
+    rows["auto/hand/fill_drain_uniform/chunks4"] = {
+        "step_s": other_hand if other_hand is not None else best_hand * 1.5,
+        "schedule": "fill_drain", "balance": [2, 2, 2, 2],
+    }
+    rows["auto/pick"] = {
+        "step_s": pick, "schedule": "1f1b", "chunks": 4,
+        "balance": [1, 1, 1, 5],
+        "predicted_step_s": predicted if predicted is not None else pick,
+    }
+    return rows
+
+
+def test_auto_gate_passes_when_pick_competitive():
+    t = _table(**_auto_rows(0.28, 0.30))
+    assert check(t, t, threshold=1.2, absolute=False) == []
+    # pick slightly worse than best hand but inside threshold
+    ok = _table(**_auto_rows(0.33, 0.30))
+    assert check(t, ok, threshold=1.2, absolute=False) == []
+
+
+def test_auto_gate_fails_by_name_when_pick_loses_to_hand():
+    base = _table(**_auto_rows(0.28, 0.30))
+    bad = _table(**_auto_rows(0.40, 0.30))  # 1.33x the best hand config
+    failures = check(base, bad, threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("auto-pick:") and "1f1b_profiled" in f for f in failures
+    ), failures
+
+
+def test_auto_gate_bounds_prediction_error_by_name():
+    base = _table(**_auto_rows(0.28, 0.30, predicted=0.09))
+    assert check(base, base, threshold=1.2, absolute=False) == []
+    wild = _table(**_auto_rows(0.28, 0.30, predicted=0.28 * 30))
+    failures = check(base, wild, threshold=1.2, absolute=False)
+    assert any(f.startswith("auto-prediction:") and "off by" in f for f in failures)
+    tiny = _table(**_auto_rows(0.28, 0.30, predicted=0.28 / 30))
+    failures = check(base, tiny, threshold=1.2, absolute=False)
+    assert any(f.startswith("auto-prediction:") for f in failures)
+    # the cap is a flag: a tighter ratio turns the committed-style gap fatal
+    failures = check(base, base, threshold=1.2, absolute=False, auto_pred_ratio=2.0)
+    assert any(f.startswith("auto-prediction:") for f in failures)
+
+
+def test_auto_gate_unusable_prediction_fails_by_name():
+    rows = _auto_rows(0.28, 0.30)
+    rows["auto/pick"]["predicted_step_s"] = 0.0
+    t = _table(**rows)
+    failures = check(t, t, threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("auto-prediction:") and "unusable" in f for f in failures
+    ), failures
+
+
+def test_auto_gate_coverage_and_missing_hands():
+    base = _table(**_auto_rows(0.28, 0.30))
+    # current run lost the pick row entirely
+    cur = dict(_auto_rows(0.28, 0.30))
+    del cur["auto/pick"]
+    failures = check(base, _table(**cur), threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("coverage:") and "auto/pick" in f for f in failures
+    ), failures
+    assert any(
+        f.startswith("auto-pick:") and "produced none" in f for f in failures
+    ), failures
+    # pick present but no hand rows to compare against
+    cur = dict(_base_rows())
+    cur["auto/pick"] = dict(_auto_rows(0.28, 0.30)["auto/pick"])
+    failures = check(_table(**cur), _table(**cur), threshold=1.2, absolute=False)
+    assert any(
+        f.startswith("auto-pick:") and "no auto/hand" in f for f in failures
+    ), failures
+
+
 # ------------------------------------------------------------ sparse gate --
 
 

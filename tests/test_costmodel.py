@@ -73,7 +73,7 @@ def test_partitioner_never_worse_than_uniform():
     every schedule (uniform is in the candidate set)."""
     costs = _costs([3.0, 0.5, 2.0, 0.1, 0.1, 4.0, 0.2, 0.3], scale_b=0.8, scale_w=1.3)
     for name, nd in (("fill_drain", None), ("1f1b", None), ("zb-h1", None),
-                     ("interleaved", 2)):
+                     ("interleaved", 2), ("zb-v", 2)):
         sched = get_schedule(name, num_devices=nd)
         bal, t = choose_balance(costs, 4, sched, 4)
         assert t <= predicted_balance_time(costs, uniform_balance(8, 4), sched, 4)
@@ -144,9 +144,17 @@ def test_profiler_measures_every_layer(karate_chunk):
     assert all(c >= 0 for c in costs.bwd_w)
     # the fused backward is measured DIRECTLY (one vjp, one primal), not
     # summed from the halves (two primals) — on tiny layers dispatch noise
-    # swamps the primal, so only the structural bound is asserted
-    assert all(b < 2 * (bb + bw) for b, bb, bw in
-               zip(costs.bwd, costs.bwd_b, costs.bwd_w))
+    # swamps the primal, so only the structural bound is asserted; a single
+    # scheduler hiccup can still break it, so one re-profile is allowed
+    def _bound_holds(c):
+        return all(b < 2 * (bb + bw) for b, bb, bw in
+                   zip(c.bwd, c.bwd_b, c.bwd_w))
+
+    if not _bound_holds(costs):
+        costs = profile_layer_costs(
+            model, model.init_params(jax.random.PRNGKey(0)), chunk0, repeats=3
+        )
+    assert _bound_holds(costs), (costs.bwd, costs.bwd_b, costs.bwd_w)
 
 
 def test_profiler_ranks_imbalanced_stack(karate_chunk):

@@ -143,18 +143,15 @@ def test_make_engine_requires_config(setup):
         make_engine(m, {"engine": "host", "balance": (3, 3)})
 
 
-def test_make_engine_legacy_shim(setup):
-    """make_engine("host", model, config) still works but warns: the engine
-    name now lives on GPipeConfig.engine and the positional-name form is
-    deprecated."""
+def test_make_engine_name_first_removed(setup):
+    """The deprecated name-first spelling make_engine("host", model, config)
+    is gone: the engine name lives on GPipeConfig.engine and the old form
+    now raises TypeError instead of warning."""
     _, m, _ = setup
-    with pytest.warns(DeprecationWarning):
-        pipe = make_engine("host", m, GPipeConfig(balance=(3, 3), chunks=2))
-    assert pipe.describe()["engine"] == "host"
-    assert pipe.config.engine == "host"
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(KeyError):
-            make_engine("nope", m, GPipeConfig(balance=(3, 3), chunks=2))
+    with pytest.raises(TypeError):
+        make_engine("host", m)
+    with pytest.raises(TypeError):
+        make_engine("nope", m)
 
 
 # ------------------------------------------- scheduled compiled executor --
@@ -165,6 +162,7 @@ SCHEDULE_MATRIX = [  # (schedule, num_devices kwarg)
     ("1f1b", None),
     ("interleaved", 2),
     ("zb-h1", None),
+    ("zb-v", 2),
 ]
 
 
@@ -253,6 +251,7 @@ PLACED_MATRIX = [  # (schedule, num_devices kwarg, ring rotation)
     ("1f1b", None, 2),
     ("interleaved", 2, 1),
     ("zb-h1", None, 3),
+    ("zb-v", 2, 1),
 ]
 
 
@@ -873,7 +872,7 @@ def test_compiled_engine_matches_host_multidevice():
     plan = make_plan(g, C, strategy="halo", halo_hops=2)
     host = make_engine(m, GPipeConfig(engine="host", balance=(2, 1, 1, 2), chunks=C))
     for schedule, nd in (("fill_drain", None), ("1f1b", None),
-                         ("interleaved", 2), ("zb-h1", None)):
+                         ("interleaved", 2), ("zb-h1", None), ("zb-v", 2)):
         comp = make_engine(m, GPipeConfig(engine="compiled",
             balance=(2, 1, 1, 2), chunks=C, schedule=schedule, num_devices=nd))
         ph = pc = params
@@ -893,7 +892,7 @@ def test_compiled_engine_matches_host_multidevice():
         assert abs(float(ev[k]) - float(want[k])) < 1e-5, (k, ev[k], want[k])
     print('MD_EVAL_OK')
     """)
-    for schedule in ("fill_drain", "1f1b", "interleaved", "zb-h1"):
+    for schedule in ("fill_drain", "1f1b", "interleaved", "zb-h1", "zb-v"):
         assert f"MD_ENGINE_OK {schedule}" in out
     assert "MD_EVAL_OK" in out
 

@@ -103,7 +103,7 @@ def test_pipeline_records_schedule(setup):
 
 @pytest.mark.parametrize(
     "schedule,num_devices",
-    [("1f1b", None), ("interleaved", 2), ("zb-h1", None)],
+    [("1f1b", None), ("interleaved", 2), ("zb-h1", None), ("zb-v", 2)],
 )
 def test_schedule_gradients_match_fill_drain(setup, schedule, num_devices):
     """Any schedule's train_step yields the same update as the fill-drain

@@ -35,6 +35,9 @@ def _schedules_for(S, C):
     for D in range(1, S + 1):
         if S % D == 0 and C % D == 0 and C >= D:
             scheds.append(get_schedule("interleaved", num_devices=D))
+    for D in range(1, S + 1):
+        if S % D == 0:  # zb-v: round-robin placement, no chunk constraint
+            scheds.append(get_schedule("zb-v", num_devices=D))
     return scheds
 
 
@@ -156,6 +159,7 @@ def _all_schedules():
         ("1f1b", get_schedule("1f1b"), 4),
         ("zb-h1", get_schedule("zb-h1"), 4),
         ("interleaved", get_schedule("interleaved", num_devices=2), 4),
+        ("zb-v", get_schedule("zb-v", num_devices=2), 4),
     ]
 
 
